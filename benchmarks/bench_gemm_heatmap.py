@@ -1,0 +1,49 @@
+"""Paper Fig. 4 — GEMM throughput heatmap across (M, N, K).
+
+The paper profiles CPU/GPU/NPU GEMM to drive template routing.  Here the
+"devices" are the two execution regimes this system routes between:
+
+  * measured XLA:CPU GEMM GFLOP/s (the host path — small/latency work), and
+  * v5e-projected MXU GFLOP/s from the roofline model (the mesh path —
+    throughput work),
+
+over the same (M, N, K) grid the engine's templates see: M = query/insert
+batch, N = database rows or clusters, K = embedding dim.  The crossover
+surface (mesh >> host only once shapes are big) is the quantitative basis
+for `core/templates.py` thresholds — the paper's Fig. 4 argument.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+
+GRID_M = (1, 8, 64, 512)
+GRID_N = (128, 1024, 8192)
+GRID_K = (128, 1024)
+
+
+def run():
+    for m in GRID_M:
+        for n in GRID_N:
+            for k in GRID_K:
+                a = jnp.asarray(np.random.randn(m, k), jnp.float32)
+                b = jnp.asarray(np.random.randn(n, k), jnp.float32)
+                f = jax.jit(lambda a, b: jax.lax.dot_general(
+                    a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+                    (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32))
+                sec = common.timeit(lambda: jax.block_until_ready(f(a, b)))
+                gf_cpu = common.gemm_flops(m, n, k) / sec / 1e9
+                gf_v5e = common.v5e_gflops(m, n, k)
+                common.emit("gemm_heatmap", f"cpu_M{m}_N{n}_K{k}",
+                            round(gf_cpu, 2), "GFLOP/s", "measured XLA:CPU")
+                common.emit("gemm_heatmap", f"v5e_M{m}_N{n}_K{k}",
+                            round(gf_v5e, 2), "GFLOP/s", "roofline-projected")
+
+
+if __name__ == "__main__":
+    common.header()
+    run()

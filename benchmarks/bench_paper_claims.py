@@ -1,0 +1,112 @@
+"""Paper §6.1 headline claims, validated at container scale.
+
+  claim 1: up to 1.4x query throughput at matched recall (vs best baseline)
+  claim 2: up to 7x faster index construction (vs HNSW, matched recall)
+  claim 3: up to 6x higher insertion throughput under concurrent queries
+
+Corpus scale here is 10-20k vectors (container CPU) vs the paper's 10k-1M;
+the ratios measure the same structural effects (GEMM-shaped scan vs
+pointer-chasing; batched build vs incremental; scheduled vs serialized
+hybrid work).  EXPERIMENTS.md compares these ratios against the paper's.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.configs.base import EngineConfig
+from repro.core import metrics
+from repro.core.engine import AgenticMemoryEngine
+from repro.core.hnsw import HNSW
+from repro.core.scheduler import WindowedScheduler
+
+N, DIM, K, NQ = 16_384, 256, 10, 64
+TARGET_RECALL = 0.90
+
+
+def run():
+    x = common.clustered_corpus(N, DIM, 128, seed=11)
+    q = x[:NQ] + 0.02 * np.random.default_rng(5).standard_normal(
+        (NQ, DIM), dtype=np.float32)
+    true = metrics.brute_force_topk(q, x, np.arange(N), K)
+
+    # ---- claim 1: QPS at matched recall ----
+    cfg = EngineConfig(dim=DIM, n_clusters=256, list_capacity=256, k=K,
+                       use_kernel=False, kmeans_iters=6)
+    eng = AgenticMemoryEngine(cfg)
+    eng.build(x)
+    ame_qps = rec_ame = None
+    for nprobe in (4, 8, 16, 32, 64, 128):
+        ids, _ = eng.query(q, k=K, nprobe=nprobe)
+        rec = metrics.recall_at_k(ids, true)
+        if rec >= TARGET_RECALL:
+            sec = common.timeit(lambda: eng.query(q, k=K, nprobe=nprobe))
+            ame_qps, rec_ame = NQ / sec, rec
+            break
+    h = HNSW(DIM, m=16, ef_construction=64)
+    t_hnsw_build = time.perf_counter()
+    h.build(x)
+    t_hnsw_build = time.perf_counter() - t_hnsw_build
+    hnsw_qps = rec_h = None
+    for ef in (16, 32, 64, 128, 256):
+        ids = h.search_batch(q, K, ef=ef)
+        rec = metrics.recall_at_k(ids, true)
+        if rec >= TARGET_RECALL:
+            sec = common.timeit(lambda: h.search_batch(q, K, ef=ef), iters=1)
+            hnsw_qps, rec_h = NQ / sec, rec
+            break
+    common.emit("paper_claims", "qps_at_recall90_ame", round(ame_qps or 0, 1),
+                "QPS", f"recall={rec_ame}")
+    common.emit("paper_claims", "qps_at_recall90_hnsw",
+                round(hnsw_qps or 0, 1), "QPS", f"recall={rec_h}")
+    if ame_qps and hnsw_qps:
+        common.emit("paper_claims", "claim1_query_speedup",
+                    round(ame_qps / hnsw_qps, 2), "x", "paper: up to 1.4x")
+
+    # ---- claim 2: build time at matched recall ----
+    t_ame = common.timeit(lambda: eng.build(x), warmup=0, iters=2)
+    common.emit("paper_claims", "build_s_ame", round(t_ame, 3), "s")
+    common.emit("paper_claims", "build_s_hnsw", round(t_hnsw_build, 3), "s")
+    common.emit("paper_claims", "claim2_build_speedup",
+                round(t_hnsw_build / t_ame, 2), "x", "paper: up to 7x")
+
+    # ---- claim 3: insert throughput under concurrent queries ----
+    ins = common.clustered_corpus(4096, DIM, 128, seed=12)
+    sched = WindowedScheduler(window=8)
+    eng2 = AgenticMemoryEngine(cfg, scheduler=sched)
+    eng2.build(x)
+    eng2.query(q, k=K)          # warm
+    eng2.insert(ins[:64])
+    tasks = []
+    t0 = time.perf_counter()
+    for i in range(0, 4096, 64):
+        tasks.append(eng2.submit("insert", ins[i: i + 64], concurrent=True))
+        if (i // 64) % 2 == 0:
+            tasks.append(eng2.submit("query", q, k=K))
+    for t in tasks:
+        t.done.wait()
+    ame_ips = 4096 / (time.perf_counter() - t0)
+    sched.shutdown()
+
+    h2 = HNSW(DIM, m=16, ef_construction=64)
+    h2.build(x[:4096])          # smaller graph: keeps HNSW timing tractable
+    t0 = time.perf_counter()
+    for i in range(0, 4096, 64):
+        for r in range(i, i + 64):
+            h2.add(ins[r])
+        if (i // 64) % 2 == 0:
+            h2.search_batch(q, K, ef=64)
+    hnsw_ips = 4096 / (time.perf_counter() - t0)
+    common.emit("paper_claims", "ips_concurrent_ame", round(ame_ips, 1),
+                "inserts/s")
+    common.emit("paper_claims", "ips_concurrent_hnsw", round(hnsw_ips, 1),
+                "inserts/s", "4x smaller graph (HNSW favour)")
+    common.emit("paper_claims", "claim3_insert_speedup",
+                round(ame_ips / hnsw_ips, 2), "x", "paper: up to 6x")
+
+
+if __name__ == "__main__":
+    common.header()
+    run()

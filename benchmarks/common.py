@@ -1,0 +1,75 @@
+"""Shared benchmark utilities: timing, CSV rows, corpora, v5e projection.
+
+Measurement policy on this CPU container (stated in every benchmark's
+output): engine benchmarks execute the pure-jnp path (`use_kernel=False`) —
+the same algorithm and GEMM structure, compiled by XLA:CPU — because Pallas
+interpret mode is a Python-loop correctness harness, not a performance
+proxy.  Alongside the measured CPU numbers each benchmark reports a
+*v5e-projected* time from the roofline model (FLOPs / bytes of the op), the
+number the §Perf program optimizes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Optional
+
+import numpy as np
+
+from repro.configs.base import V5E
+
+ROWS: List[str] = []
+
+
+def emit(bench: str, name: str, value, unit: str = "", note: str = ""):
+    row = f"{bench},{name},{value},{unit},{note}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def header():
+    print("bench,name,value,unit,note", flush=True)
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds over `iters` calls (after warmup jit)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def clustered_corpus(n: int, dim: int, n_centers: int = 64, *, seed: int = 0,
+                     spread: float = 0.15, normalize: bool = True):
+    """Synthetic clusterable corpus (IVF-friendly, like embedding data)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_centers, dim), dtype=np.float32)
+    asg = rng.integers(0, n_centers, n)
+    x = centers[asg] + spread * rng.standard_normal((n, dim), dtype=np.float32)
+    if normalize:
+        x /= np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+    return x
+
+
+def gemm_flops(m: int, n: int, k: int) -> float:
+    return 2.0 * m * n * k
+
+
+def gemm_bytes(m: int, n: int, k: int, in_bytes: int = 4,
+               out_bytes: int = 4) -> float:
+    return in_bytes * (m * k + n * k) + out_bytes * m * n
+
+
+def v5e_gemm_seconds(m: int, n: int, k: int, *, in_bytes: int = 2,
+                     out_bytes: int = 4) -> float:
+    """Roofline-projected single-chip GEMM time (max of compute/memory)."""
+    c = gemm_flops(m, n, k) / V5E.peak_flops_bf16
+    b = gemm_bytes(m, n, k, in_bytes, out_bytes) / V5E.hbm_bandwidth
+    return max(c, b)
+
+
+def v5e_gflops(m: int, n: int, k: int, **kw) -> float:
+    return gemm_flops(m, n, k) / v5e_gemm_seconds(m, n, k, **kw) / 1e9

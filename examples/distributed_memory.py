@@ -1,0 +1,57 @@
+"""Beyond-paper: the agentic memory sharded over a device mesh.
+
+    PYTHONPATH=src python examples/distributed_memory.py
+
+The paper's engine is single-device.  This example runs the distributed
+tier: the IVF lists shard row-wise over a mesh (here 8 virtual host
+devices), each shard scans locally with the fused-GEMM path, and
+candidates merge into a global top-k — a billion-vector memory has the
+same API as the on-device one.  Includes distributed insert routing.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import numpy as np
+
+from repro.configs.base import EngineConfig
+from repro.core import distributed as dce
+from repro.core import metrics
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = EngineConfig(dim=128, n_clusters=128, list_capacity=64,
+                       nprobe=16, k=5, use_kernel=False, kmeans_iters=4,
+                       shard_db=True)
+    rng = np.random.default_rng(0)
+    n = 16_384
+    x = rng.standard_normal((n, cfg.dim), dtype=np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    ids = np.arange(n, dtype=np.int32)
+
+    key = jax.random.PRNGKey(0)
+    state, _spilled = dce.dist_build(key, x, ids, cfg, mesh)
+    print(f"distributed build ok: lists sharded over "
+          f"{mesh.devices.size} devices "
+          f"(per-device rows ~ {cfg.capacity // 8})")
+
+    q = x[:8] + 0.02 * rng.standard_normal((8, cfg.dim), dtype=np.float32)
+    got_ids, scores = dce.dist_query(state, q, cfg, mesh, k=5)
+    true = metrics.brute_force_topk(q, x, ids, 5)
+    rec = metrics.recall_at_k(np.asarray(got_ids), true)
+    print(f"distributed query recall@5 = {rec:.3f}")
+
+    new = rng.standard_normal((256, cfg.dim), dtype=np.float32)
+    state, spilled = dce.dist_insert(
+        state, new, np.arange(n, n + 256, dtype=np.int32), cfg, mesh)
+    print(f"distributed insert: 256 rows routed to shards "
+          f"({int(np.sum(spilled))} spilled)")
+    got_ids2, _ = dce.dist_query(state, new[:4], cfg, mesh, k=1)
+    hit = np.mean(np.asarray(got_ids2)[:, 0] >= n)
+    print(f"fresh inserts retrievable: {hit:.0%} of probes "
+          f"return a new id at rank 1")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""Config dataclasses for models, shapes, meshes, and the memory engine.
+
+Everything is a frozen dataclass so configs hash and can key jit caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One assigned architecture. `family` selects the block wiring."""
+
+    name: str
+    family: str                      # dense | moe | encdec | hybrid | ssm | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    d_ff_expert: int = 0             # per-expert hidden (fine-grained MoE)
+    capacity_factor: float = 1.25
+
+    # --- attention details ---
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0          # gemma2: 4096
+    alt_local_global: bool = False   # gemma2: even layers local, odd global
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    qk_norm: bool = False
+    parallel_block: bool = False     # stablelm-2: attn & mlp in parallel
+    post_norm: bool = False          # gemma2: sandwich (pre+post) norms
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0               # mamba2 N / rwkv head size
+    ssm_expand: int = 2              # mamba2 d_inner = expand * d_model
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    shared_block_period: int = 0     # zamba2: shared attn block every P mamba blocks
+
+    # --- encoder-decoder ---
+    num_enc_layers: int = 0
+    num_dec_layers: int = 0
+
+    # --- VLM ---
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl: (t, h, w) head_dim halves
+
+    # --- misc ---
+    act: str = "silu"                # silu | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    emb_scale: bool = False          # gemma: scale embeddings by sqrt(d_model)
+    scan_period: int = 1             # layers folded into one scan step
+    remat: bool = True
+    dtype: str = "bfloat16"
+    source: str = ""                 # provenance note
+
+    # ------------------------------------------------------------------
+    @property
+    def is_encdec(self) -> bool:
+        return self.family == "encdec"
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if a 500k-token KV/state is tractable (long_500k eligibility)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up so the embedding table shards over 16 and tiles over 128."""
+        return _round_up(self.vocab_size, 2048)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def n_periods(self) -> int:
+        assert self.num_layers % max(self.scan_period, 1) == 0
+        return self.num_layers // max(self.scan_period, 1)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline cross-check)."""
+        from repro.models import accounting
+        return accounting.param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models import accounting
+        return accounting.active_param_count(self)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524_288, 1)
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    # axis sizes: fixed by the production spec
+    pods: int = 2
+    data: int = 16
+    model: int = 16
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.pods, self.data, self.model) if self.multi_pod else (self.data, self.model)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = self.data * self.model
+        return n * self.pods if self.multi_pod else n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        """Axes that batch (DP/FSDP) shards over."""
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_accum: int = 1
+    grad_compression: str = "none"   # none | bf16 | int8
+    remat_policy: str = "block"      # none | block | full
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Memory engine (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """AME agentic-memory engine configuration.
+
+    The `aligned` / `fused_conversion` / `pipelined` flags select between the
+    paper-faithful optimized path and deliberately-degraded baselines used in
+    the ablation benchmarks (paper Fig. 8 / Fig. 9).
+    """
+
+    dim: int = 1024                  # embedding dim (BGE-large = 1024)
+    n_clusters: int = 1024           # multiple of 128 when aligned
+    list_capacity: int = 512         # slots per IVF list, multiple of 8
+    nprobe: int = 32
+    k: int = 16
+    metric: str = "ip"               # ip | l2
+    store_dtype: str = "float32"     # database storage dtype
+    compute_dtype: str = "bfloat16"  # MXU operand dtype (paper: FP16 on HMX)
+
+    # ablation switches (paper Fig. 8 ladder)
+    aligned: bool = True             # tile-aligned cluster count / padding
+    fused_conversion: bool = True    # fp32->bf16 inside the kernel (vs pre-copy)
+    use_kernel: bool = True          # pallas kernels vs pure-jnp reference
+    interpret: bool = True           # CPU container: run kernels in interpret mode
+
+    # scheduler
+    window: int = 8                  # windowed batch submission size
+    kmeans_iters: int = 10
+
+    # distributed
+    shard_db: bool = False           # shard lists over the mesh data axes
+
+    def __post_init__(self):
+        if self.aligned:
+            assert self.n_clusters % 128 == 0, "aligned engine: n_clusters % 128"
+            assert self.dim % 128 == 0, "aligned engine: dim % 128"
+            assert self.list_capacity % 8 == 0, "aligned engine: list_capacity % 8"
+
+    @property
+    def capacity(self) -> int:
+        return self.n_clusters * self.list_capacity
+
+
+# ---------------------------------------------------------------------------
+# Roofline hardware model (TPU v5e)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HardwareConfig:
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12      # per chip
+    hbm_bandwidth: float = 819e9         # bytes/s per chip
+    ici_bandwidth: float = 50e9          # bytes/s per link (intra-pod)
+    dcn_bandwidth: float = 25e9          # bytes/s per link (pod axis)
+    hbm_bytes: float = 16e9              # capacity per chip
+    vmem_bytes: float = 128 * 2**20      # v5e VMEM (128 MiB across cores; ~16MiB/core usable per kernel plan)
+    mxu_tile: Tuple[int, int] = (128, 128)
+
+
+V5E = HardwareConfig()

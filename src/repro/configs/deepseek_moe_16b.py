@@ -1,0 +1,5 @@
+"""Config for --arch deepseek_moe_16b (see configs/archs.py for provenance)."""
+from repro.configs.archs import DEEPSEEK_MOE_16B as CONFIG
+from repro.configs.archs import reduced as _reduced
+
+REDUCED = _reduced(CONFIG)

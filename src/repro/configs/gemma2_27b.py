@@ -1,0 +1,5 @@
+"""Config for --arch gemma2_27b (see configs/archs.py for provenance)."""
+from repro.configs.archs import GEMMA2_27B as CONFIG
+from repro.configs.archs import reduced as _reduced
+
+REDUCED = _reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for --arch granite_3_2b (see configs/archs.py for provenance)."""
+from repro.configs.archs import GRANITE_3_2B as CONFIG
+from repro.configs.archs import reduced as _reduced
+
+REDUCED = _reduced(CONFIG)

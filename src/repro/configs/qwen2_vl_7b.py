@@ -1,0 +1,5 @@
+"""Config for --arch qwen2_vl_7b (see configs/archs.py for provenance)."""
+from repro.configs.archs import QWEN2_VL_7B as CONFIG
+from repro.configs.archs import reduced as _reduced
+
+REDUCED = _reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for --arch rwkv6_1_6b (see configs/archs.py for provenance)."""
+from repro.configs.archs import RWKV6_1_6B as CONFIG
+from repro.configs.archs import reduced as _reduced
+
+REDUCED = _reduced(CONFIG)

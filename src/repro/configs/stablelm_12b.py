@@ -1,0 +1,5 @@
+"""Config for --arch stablelm_12b (see configs/archs.py for provenance)."""
+from repro.configs.archs import STABLELM_12B as CONFIG
+from repro.configs.archs import reduced as _reduced
+
+REDUCED = _reduced(CONFIG)

@@ -1,0 +1,203 @@
+"""Distributed agentic memory — the engine sharded over a TPU mesh.
+
+Beyond-paper (DESIGN.md §2): AME is single-device; we scale the same design
+to pods.  Partitioning: every device owns an equal slice of *every* IVF
+list's slots (lists sharded along the slot axis), plus its own spill buffer.
+Centroids are replicated.  Consequences:
+
+  * query  — each device scans its slice with the fused kernel, takes a
+             local top-k, and a tiny all-gather of k candidates per device
+             merges globally (the paper's host-side top-k aggregation, made
+             hierarchical).
+  * insert — rows are routed round-robin to devices; assignment is local
+             GEMM (centroids replicated), packing is local.
+  * build/rebuild — distributed k-means: local assign + local one-hot-GEMM
+             partial sums, `psum` over the mesh, identical centroid update
+             everywhere.  Collective volume per iteration is O(C*D), not
+             O(N*D).
+
+Inside `shard_map` every device sees a plain `IVFState`, so the entire
+single-device functional core is reused verbatim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import EngineConfig
+from repro.core import index as ivf
+from repro.kernels import ops
+
+
+def _shard_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All mesh axes shard the DB (engine rows want every chip)."""
+    return tuple(mesh.axis_names)
+
+
+def state_specs(mesh: Mesh) -> ivf.IVFState:
+    """PartitionSpecs for a distributed IVFState."""
+    ax = _shard_axes(mesh)
+    return ivf.IVFState(
+        centroids=P(),                 # replicated
+        lists=P(None, ax, None),       # slot axis sharded
+        list_ids=P(None, ax),
+        list_sizes=P(ax),              # stacked per-shard rows: [S*C] -> local [C]
+        spill=P(ax, None),
+        spill_ids=P(ax),
+        spill_size=P(ax),
+        num_deleted=P(ax),
+    )
+
+
+def empty_dist_state(cfg: EngineConfig, mesh: Mesh,
+                     spill_capacity_per_shard: int = 4096) -> ivf.IVFState:
+    """Global arrays for the sharded state (local view == IVFState)."""
+    s = mesh.size
+    c, l, d = cfg.n_clusters, cfg.list_capacity, cfg.dim
+    return ivf.IVFState(
+        centroids=jnp.zeros((c, d), jnp.float32),
+        lists=jnp.zeros((c, l * s, d), jnp.float32),
+        list_ids=jnp.full((c, l * s), -1, jnp.int32),
+        list_sizes=jnp.zeros((s * c,), jnp.int32),
+        spill=jnp.zeros((s * spill_capacity_per_shard, d), jnp.float32),
+        spill_ids=jnp.full((s * spill_capacity_per_shard,), -1, jnp.int32),
+        spill_size=jnp.zeros((s,), jnp.int32),
+        num_deleted=jnp.zeros((s,), jnp.int32),
+    )
+
+
+def _local(state: ivf.IVFState) -> ivf.IVFState:
+    """Normalize the shard-local view to a plain IVFState (squeeze scalars)."""
+    return state._replace(spill_size=state.spill_size[0],
+                          num_deleted=state.num_deleted[0])
+
+
+def _unlocal(state: ivf.IVFState) -> ivf.IVFState:
+    return state._replace(spill_size=state.spill_size[None],
+                          num_deleted=state.num_deleted[None])
+
+
+# ---------------------------------------------------------------------------
+# Distributed k-means + build
+# ---------------------------------------------------------------------------
+
+def dist_build(key, x, ids, cfg: EngineConfig, mesh: Mesh,
+               spill_capacity_per_shard: int = 4096):
+    """Build over globally-sharded rows x f32[N, D] (N sharded over the mesh)."""
+    ax = _shard_axes(mesh)
+
+    n_shards = mesh.size
+
+    def _build(seed_loc, x_loc, ids_loc):
+        valid = ids_loc >= 0
+        # ---- distributed k-means (shared centroids via psum) ----
+        m = x_loc.shape[0]
+        key = jax.random.key(seed_loc[0])
+        k0, key = jax.random.split(key)
+        # seed: local gumbel-top-k candidates, gathered then truncated
+        g = jax.random.gumbel(k0, (m,)) + jnp.where(valid, 0.0, -1e30)
+        nseed = max(cfg.n_clusters // n_shards, 1)
+        _, si = jax.lax.top_k(g, nseed)
+        seeds = jax.lax.all_gather(x_loc[si], ax, tiled=True)
+        centroids = seeds[: cfg.n_clusters]
+        if centroids.shape[0] < cfg.n_clusters:
+            reps = -(-cfg.n_clusters // centroids.shape[0])
+            centroids = jnp.tile(centroids, (reps, 1))[: cfg.n_clusters]
+
+        def step(cent, key_i):
+            idx, _ = ops.kmeans_assign(
+                x_loc, cent, use_kernel=cfg.use_kernel,
+                fused_conversion=cfg.fused_conversion, interpret=cfg.interpret)
+            idx = jnp.where(valid, idx, -1)
+            sums, counts = ops.segsum_gemm(
+                x_loc, idx, n_clusters=cfg.n_clusters,
+                use_kernel=cfg.use_kernel, interpret=cfg.interpret)
+            sums = jax.lax.psum(sums, ax)        # O(C*D) collective
+            counts = jax.lax.psum(counts, ax)
+            new = sums / jnp.maximum(counts, 1.0)[:, None]
+            new = jnp.where((counts > 0)[:, None], new, cent)
+            if cfg.metric == "ip":
+                new = new / jnp.maximum(
+                    jnp.linalg.norm(new, axis=1, keepdims=True), 1e-6)
+            return new, None
+
+        centroids, _ = jax.lax.scan(
+            step, centroids, jax.random.split(key, cfg.kmeans_iters))
+
+        # ---- local pack into this shard's slots ----
+        idx, _ = ops.kmeans_assign(
+            x_loc, centroids, use_kernel=cfg.use_kernel,
+            fused_conversion=cfg.fused_conversion, interpret=cfg.interpret)
+        idx = jnp.where(valid, idx, -1)
+        st = ivf.empty_state(cfg, spill_capacity_per_shard)
+        st = st._replace(centroids=centroids)
+        st, spilled = ivf._pack(st, x_loc, ids_loc, idx, cfg)
+        return _unlocal(st), spilled[None]
+
+    specs = state_specs(mesh)
+    fn = shard_map(
+        _build, mesh=mesh,
+        in_specs=(P(ax), P(ax), P(ax)),
+        out_specs=(specs, P(ax)),
+        check_vma=False,
+    )
+    base = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    seeds = (base + jnp.arange(mesh.size, dtype=jnp.int32)) % (2**31 - 1)
+    return fn(seeds, x, ids)
+
+
+# ---------------------------------------------------------------------------
+# Distributed query
+# ---------------------------------------------------------------------------
+
+def dist_query(state: ivf.IVFState, q, cfg: EngineConfig, mesh: Mesh, k: int):
+    """Query q f32[B, D] (replicated) -> (ids i32[B,k], scores f32[B,k]).
+
+    Local fused-scan top-k per shard, then one small all-gather of k
+    candidates per shard and a final top-k — hierarchical merge.
+    """
+    ax = _shard_axes(mesh)
+
+    def _query(state_loc, q_loc):
+        st = _local(state_loc)
+        ids_l, sc_l = ivf.query_full_scan(st, q_loc, cfg, k)
+        ids_g = jax.lax.all_gather(ids_l, ax, axis=1, tiled=True)   # [B, S*k]
+        sc_g = jax.lax.all_gather(sc_l, ax, axis=1, tiled=True)
+        top, pos = jax.lax.top_k(sc_g, k)
+        return jnp.take_along_axis(ids_g, pos, axis=1), top
+
+    fn = shard_map(
+        _query, mesh=mesh,
+        in_specs=(state_specs(mesh), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(state, q)
+
+
+# ---------------------------------------------------------------------------
+# Distributed insert
+# ---------------------------------------------------------------------------
+
+def dist_insert(state: ivf.IVFState, x, ids, cfg: EngineConfig, mesh: Mesh):
+    """Insert x f32[B, D] (B sharded round-robin over the mesh)."""
+    ax = _shard_axes(mesh)
+
+    def _insert(state_loc, x_loc, ids_loc):
+        st = _local(state_loc)
+        st, spilled = ivf.insert(st, x_loc, ids_loc, cfg)
+        return _unlocal(st), spilled[None]
+
+    specs = state_specs(mesh)
+    fn = shard_map(
+        _insert, mesh=mesh,
+        in_specs=(specs, P(ax), P(ax)),
+        out_specs=(specs, P(ax)),
+        check_vma=False,
+    )
+    return fn(state, x, ids)

@@ -1,0 +1,183 @@
+"""HNSW baseline (Malkov & Yashunin) — numpy, single-threaded.
+
+The paper's primary comparison index.  This is a faithful, compact
+implementation of the published algorithm: exponentially-sampled levels,
+greedy descent through the upper layers, beam (ef) search at layer 0,
+M-bounded neighbor lists with the simple-pruning heuristic.
+
+It exists to be *measured against* (benchmarks for paper Fig. 6/7), and it
+exhibits exactly the properties the paper calls out as SoC/accelerator-
+hostile: pointer-chasing adjacency, irregular memory access, per-element
+scalar distance work, and O(N) incremental build with no batched GEMM shape
+anywhere.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class HNSW:
+    def __init__(self, dim: int, *, m: int = 16, ef_construction: int = 100,
+                 metric: str = "ip", seed: int = 0, max_elements: int = 1 << 20):
+        self.dim = dim
+        self.m = m
+        self.m0 = 2 * m
+        self.efc = ef_construction
+        self.metric = metric
+        self.ml = 1.0 / math.log(m)
+        self.rng = np.random.default_rng(seed)
+        self.vecs = np.zeros((0, dim), np.float32)
+        self.levels: List[int] = []
+        # graph[level][node] -> np.ndarray of neighbor ids
+        self.graph: List[Dict[int, np.ndarray]] = []
+        self.entry: Optional[int] = None
+        self.max_level = -1
+        self.ids: List[int] = []          # external ids
+        self.deleted: set = set()
+
+    # ------------------------------------------------------------------
+    def _dist(self, q: np.ndarray, idx) -> np.ndarray:
+        v = self.vecs[idx]
+        if self.metric == "ip":
+            return -(v @ q)
+        d = v - q
+        return np.einsum("...d,...d->...", d, d)
+
+    def _sample_level(self) -> int:
+        return int(-math.log(max(self.rng.random(), 1e-12)) * self.ml)
+
+    # ------------------------------------------------------------------
+    def _search_layer(self, q: np.ndarray, entry: int, ef: int,
+                      level: int) -> List[Tuple[float, int]]:
+        """Beam search in one layer; returns sorted (dist, node)."""
+        import heapq
+        g = self.graph[level]
+        d0 = float(self._dist(q, entry))
+        visited = {entry}
+        cand = [(d0, entry)]                  # min-heap by distance
+        best = [(-d0, entry)]                 # max-heap (worst first)
+        while cand:
+            d, u = heapq.heappop(cand)
+            if d > -best[0][0]:
+                break
+            for v in g.get(u, ()):            # pointer-chase: irregular reads
+                v = int(v)
+                if v in visited:
+                    continue
+                visited.add(v)
+                dv = float(self._dist(q, v))
+                if len(best) < ef or dv < -best[0][0]:
+                    heapq.heappush(cand, (dv, v))
+                    heapq.heappush(best, (-dv, v))
+                    if len(best) > ef:
+                        heapq.heappop(best)
+        return sorted((-nd, n) for nd, n in best)
+
+    def _select(self, cands: List[Tuple[float, int]], m: int) -> np.ndarray:
+        """SELECT-NEIGHBORS-HEURISTIC (Malkov & Yashunin, Alg. 4).
+
+        Keep candidate c only if it is closer to the query than to every
+        already-selected neighbor — preserves cross-cluster connectivity
+        that naive closest-m pruning destroys on clustered data.
+        """
+        selected: List[int] = []
+        for d_cq, c in cands:                     # increasing distance
+            if len(selected) >= m:
+                break
+            ok = True
+            for s in selected:
+                if float(self._dist(self.vecs[c], [s])[0]) < d_cq:
+                    ok = False
+                    break
+            if ok:
+                selected.append(c)
+        # backfill with pruned candidates if the heuristic was too strict
+        if len(selected) < m:
+            chosen = set(selected)
+            for _, c in cands:
+                if len(selected) >= m:
+                    break
+                if c not in chosen:
+                    selected.append(c)
+        return np.asarray(selected, np.int64)
+
+    def _link(self, node: int, neigh: np.ndarray, level: int):
+        g = self.graph[level]
+        g[node] = neigh
+        mmax = self.m0 if level == 0 else self.m
+        for v in neigh:
+            v = int(v)
+            cur = g.get(v)
+            cur = np.append(cur, node) if cur is not None else np.asarray(
+                [node], np.int64)
+            if len(cur) > mmax:
+                # shrink with the SAME diversity heuristic (as hnswlib):
+                # naive closest-m eviction drops the cross-cluster edges and
+                # disconnects the layer-0 graph on clustered data.
+                d = self._dist(self.vecs[v], cur)
+                order = np.argsort(d)
+                cands = [(float(d[i]), int(cur[i])) for i in order]
+                cur = self._select(cands, mmax)
+            g[v] = cur
+
+    # ------------------------------------------------------------------
+    def add(self, x: np.ndarray, ext_id: Optional[int] = None) -> int:
+        x = np.asarray(x, np.float32)
+        node = len(self.levels)
+        self.vecs = np.concatenate([self.vecs, x[None]], 0)
+        self.ids.append(ext_id if ext_id is not None else node)
+        lvl = self._sample_level()
+        self.levels.append(lvl)
+        while len(self.graph) <= lvl:
+            self.graph.append({})
+        if self.entry is None:
+            self.entry = node
+            self.max_level = lvl
+            for l in range(lvl + 1):
+                self.graph[l][node] = np.asarray([], np.int64)
+            return node
+        ep = self.entry
+        for l in range(self.max_level, lvl, -1):       # greedy descent
+            ep = self._search_layer(x, ep, 1, l)[0][1]
+        for l in range(min(lvl, self.max_level), -1, -1):
+            cands = self._search_layer(x, ep, self.efc, l)
+            m = self.m0 if l == 0 else self.m
+            self._link(node, self._select(cands, m), l)
+            ep = cands[0][1]
+        if lvl > self.max_level:
+            self.max_level = lvl
+            self.entry = node
+        return node
+
+    def build(self, xs: np.ndarray, ids=None):
+        for i, x in enumerate(xs):
+            self.add(x, None if ids is None else int(ids[i]))
+
+    def delete(self, ext_id: int):
+        self.deleted.add(ext_id)
+
+    # ------------------------------------------------------------------
+    def search(self, q: np.ndarray, k: int, ef: int = 50
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        q = np.asarray(q, np.float32)
+        if self.entry is None:
+            return np.full(k, -1, np.int64), np.full(k, np.inf, np.float32)
+        ep = self.entry
+        for l in range(self.max_level, 0, -1):
+            ep = self._search_layer(q, ep, 1, l)[0][1]
+        res = self._search_layer(q, ep, max(ef, k), 0)
+        out = [(d, n) for d, n in res if self.ids[n] not in self.deleted]
+        out = out[:k]
+        ids = np.asarray([self.ids[n] for _, n in out], np.int64)
+        ds = np.asarray([d for d, _ in out], np.float32)
+        if len(ids) < k:
+            ids = np.pad(ids, (0, k - len(ids)), constant_values=-1)
+            ds = np.pad(ds, (0, k - len(ds)), constant_values=np.inf)
+        return ids, ds
+
+    def search_batch(self, qs: np.ndarray, k: int, ef: int = 50):
+        ids = np.stack([self.search(q, k, ef)[0] for q in qs])
+        return ids

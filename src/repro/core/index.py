@@ -1,0 +1,335 @@
+"""Tile-aligned IVF index — AME's hardware-aware vector index on TPU.
+
+Functional core: the index is an `IVFState` pytree of statically-shaped
+arrays; every operation is a pure jittable function.  Layout (DESIGN.md §3):
+
+  centroids  : f32[C, D]        C % 128 == 0, D % 128 == 0 (MXU lane tiles)
+  lists      : f32[C, L, D]     dense padded lists, L % 8 == 0 (fp32 sublane)
+  list_ids   : i32[C, L]        external ids; -1 = empty/tombstoned slot
+  list_sizes : i32[C]           high-water marks (tombstones not reclaimed
+                                until rebuild, as in the paper's maintenance)
+  spill_*    :                  fixed-capacity overflow buffer for rows whose
+                                target list is full; drained at rebuild
+
+There is no pointer-chasing anywhere: queries, inserts, and rebuilds are all
+GEMM-shaped (the paper's core refactor), and the dense layout means gathers
+of probed lists are contiguous DMA streams, not random probes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import EngineConfig
+from repro.kernels import ops
+
+
+class IVFState(NamedTuple):
+    centroids: jax.Array      # f32[C, D]
+    lists: jax.Array          # f32[C, L, D]
+    list_ids: jax.Array       # i32[C, L]
+    list_sizes: jax.Array     # i32[C]
+    spill: jax.Array          # f32[S, D]
+    spill_ids: jax.Array      # i32[S]
+    spill_size: jax.Array     # i32[]
+    num_deleted: jax.Array    # i32[]
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def list_capacity(self) -> int:
+        return self.lists.shape[1]
+
+
+def empty_state(cfg: EngineConfig, spill_capacity: int = 4096) -> IVFState:
+    c, l, d = cfg.n_clusters, cfg.list_capacity, cfg.dim
+    return IVFState(
+        centroids=jnp.zeros((c, d), jnp.float32),
+        lists=jnp.zeros((c, l, d), jnp.float32),
+        list_ids=jnp.full((c, l), -1, jnp.int32),
+        list_sizes=jnp.zeros((c,), jnp.int32),
+        spill=jnp.zeros((spill_capacity, d), jnp.float32),
+        spill_ids=jnp.full((spill_capacity,), -1, jnp.int32),
+        spill_size=jnp.zeros((), jnp.int32),
+        num_deleted=jnp.zeros((), jnp.int32),
+    )
+
+
+def live_count(state: IVFState) -> jax.Array:
+    return (jnp.sum(state.list_ids >= 0) + jnp.sum(state.spill_ids >= 0))
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spill_capacity"))
+def build(key: jax.Array, x: jax.Array, ids: jax.Array, cfg: EngineConfig,
+          spill_capacity: int = 4096) -> Tuple["IVFState", jax.Array]:
+    """Bulk-build an index over rows x f32[N, D] (ids i32[N]; -1 = ignore).
+
+    k-means (GEMM kernels) -> pack rows into padded lists.  Returns
+    (state, n_spilled).  Rows that overflow both their list and the spill
+    buffer are dropped and counted.
+    """
+    from repro.core.kmeans import kmeans as _kmeans
+
+    valid = ids >= 0
+    centroids, assign = _kmeans(key, x, valid, cfg)
+    state = empty_state(cfg, spill_capacity)._replace(centroids=centroids)
+    return _pack(state, x, ids, assign, cfg)
+
+
+def _pack(state: "IVFState", x: jax.Array, ids: jax.Array,
+          assign: jax.Array, cfg: EngineConfig) -> Tuple["IVFState", jax.Array]:
+    """Scatter assigned rows into padded lists; overflow goes to spill."""
+    l_cap = state.list_capacity
+    c = state.n_clusters
+    cl = jnp.where(ids >= 0, assign, c + 1)        # invalid rows sort last
+    rank = _batch_ranks(cl)
+    offsets = state.list_sizes[jnp.clip(cl, 0, c - 1)] + rank
+    ok = (ids >= 0) & (cl < c) & (offsets < l_cap)
+
+    cl_w = jnp.where(ok, cl, c)
+    lists = state.lists.at[cl_w, offsets].set(x, mode="drop")
+    list_ids = state.list_ids.at[cl_w, offsets].set(ids, mode="drop")
+    list_sizes = state.list_sizes + jnp.bincount(
+        jnp.where(ok, cl, c), length=c + 1)[:c].astype(jnp.int32)
+
+    over = (ids >= 0) & ~ok
+    s_cap = state.spill.shape[0]
+    spos = state.spill_size + jnp.cumsum(over) - 1
+    s_ok = over & (spos < s_cap)
+    spos_w = jnp.where(s_ok, spos, s_cap)
+    spill = state.spill.at[spos_w].set(x, mode="drop")
+    spill_ids = state.spill_ids.at[spos_w].set(ids, mode="drop")
+    spill_size = jnp.minimum(state.spill_size + jnp.sum(over), s_cap)
+
+    new = state._replace(lists=lists, list_ids=list_ids,
+                         list_sizes=list_sizes, spill=spill,
+                         spill_ids=spill_ids, spill_size=spill_size)
+    return new, jnp.sum(over)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def rebuild(key: jax.Array, state: "IVFState",
+            cfg: EngineConfig) -> Tuple["IVFState", jax.Array]:
+    """Full rebuild: drain lists + spill, re-cluster, re-pack.
+
+    Reclaims tombstoned slots and drains the spill buffer (the paper's
+    'index template' operation — large, latency-insensitive, GEMM-heavy).
+    """
+    rows, ids = _flat_rows(state)
+    return build(key, rows, ids, cfg, spill_capacity=state.spill.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Insert
+# ---------------------------------------------------------------------------
+
+def _batch_ranks(cl: jax.Array) -> jax.Array:
+    """rank of row i among earlier batch rows assigned to the same cluster.
+
+    Sort-based (O(B log B)): stable-sort by cluster, position within the
+    cluster run is arange - run_start.
+    """
+    b = cl.shape[0]
+    order = jnp.argsort(cl, stable=True)
+    sorted_cl = cl[order]
+    first = jnp.concatenate(
+        [jnp.zeros((1,), bool), sorted_cl[1:] != sorted_cl[:-1]])
+    run_start = jnp.maximum.accumulate(
+        jnp.where(first, jnp.arange(b), 0))
+    pos = jnp.arange(b) - run_start
+    return jnp.zeros((b,), jnp.int32).at[order].set(pos.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def insert(state: IVFState, x: jax.Array, ids: jax.Array,
+           cfg: EngineConfig) -> Tuple[IVFState, jax.Array]:
+    """Insert rows x f32[B, D] with external ids i32[B].
+
+    Assignment is the `kmeans_assign` GEMM kernel (the paper: inserts map to
+    dense matmuls).  The state buffer is donated — updates are in place, the
+    TPU analogue of the paper's zero-copy ION shared buffers.
+
+    Returns (new_state, n_spilled_or_dropped i32[]).
+    """
+    b = x.shape[0]
+    l_cap = state.list_capacity
+    cl, _ = ops.kmeans_assign(
+        x, state.centroids, use_kernel=cfg.use_kernel,
+        fused_conversion=cfg.fused_conversion, interpret=cfg.interpret)
+
+    rank = _batch_ranks(cl)
+    offsets = state.list_sizes[cl] + rank
+    fits = offsets < l_cap
+
+    # in-list scatter (mode=drop discards non-fitting rows)
+    cl_w = jnp.where(fits, cl, state.n_clusters)      # OOB row index => drop
+    lists = state.lists.at[cl_w, offsets].set(x, mode="drop")
+    list_ids = state.list_ids.at[cl_w, offsets].set(ids, mode="drop")
+    list_sizes = state.list_sizes + jnp.bincount(
+        jnp.where(fits, cl, state.n_clusters), length=state.n_clusters + 1
+    )[: state.n_clusters].astype(jnp.int32)
+
+    # overflow -> spill buffer
+    over = ~fits
+    s_cap = state.spill.shape[0]
+    srank = jnp.cumsum(over) - 1
+    spos = state.spill_size + srank
+    s_ok = over & (spos < s_cap)
+    spos_w = jnp.where(s_ok, spos, s_cap)
+    spill = state.spill.at[spos_w].set(x, mode="drop")
+    spill_ids = state.spill_ids.at[spos_w].set(ids, mode="drop")
+    spill_size = jnp.minimum(state.spill_size + jnp.sum(over), s_cap)
+
+    n_overflow = jnp.sum(over)
+    new = state._replace(lists=lists, list_ids=list_ids,
+                         list_sizes=list_sizes, spill=spill,
+                         spill_ids=spill_ids, spill_size=spill_size)
+    return new, n_overflow
+
+
+# ---------------------------------------------------------------------------
+# Delete (tombstoning)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def delete(state: IVFState, ids: jax.Array) -> IVFState:
+    """Tombstone `ids` i32[B]; slots are reclaimed at the next rebuild."""
+
+    def _mask(haystack):
+        hit = jnp.zeros(haystack.shape, bool)
+        def body(i, hit):
+            return hit | (haystack == ids[i])
+        return jax.lax.fori_loop(0, ids.shape[0], body, hit)
+
+    l_hit = _mask(state.list_ids)
+    s_hit = _mask(state.spill_ids)
+    n = jnp.sum(l_hit) + jnp.sum(s_hit)
+    return state._replace(
+        list_ids=jnp.where(l_hit, -1, state.list_ids),
+        spill_ids=jnp.where(s_hit, -1, state.spill_ids),
+        num_deleted=state.num_deleted + n.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Query
+# ---------------------------------------------------------------------------
+
+def _flat_rows(state: IVFState) -> Tuple[jax.Array, jax.Array]:
+    c, l, d = state.lists.shape
+    rows = jnp.concatenate(
+        [state.lists.reshape(c * l, d), state.spill], axis=0)
+    ids = jnp.concatenate(
+        [state.list_ids.reshape(c * l), state.spill_ids], axis=0)
+    return rows, ids
+
+
+def _metric_norms(rows: jax.Array, metric: str) -> Optional[jax.Array]:
+    if metric == "l2":
+        return jnp.sum(rows.astype(jnp.float32) ** 2, axis=1)
+    return None
+
+
+def _order_scores(scores: jax.Array, metric: str) -> jax.Array:
+    # top_k maximizes; L2 path returns distances (smaller better) -> negate
+    return -scores if metric == "l2" else scores
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def query_full_scan(state: IVFState, q: jax.Array, cfg: EngineConfig,
+                    k: int) -> Tuple[jax.Array, jax.Array]:
+    """Throughput template: fused GEMM scan of the whole database.
+
+    For large query batches the probed-subset union approaches the full DB,
+    so the MXU-friendly move is one dense scan (paper Fig. 4: big GEMMs are
+    where the matrix engine wins).  Returns (ids i32[B,k], scores f32[B,k]).
+    """
+    rows, ids = _flat_rows(state)
+    scores = ops.scan_scores(
+        q, rows, ids, _metric_norms(rows, cfg.metric), metric=cfg.metric,
+        use_kernel=cfg.use_kernel, fused_conversion=cfg.fused_conversion,
+        interpret=cfg.interpret)
+    top, idx = jax.lax.top_k(_order_scores(scores, cfg.metric), k)
+    return ids[idx], top
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k"))
+def query_full_scan_rows(state: IVFState, q: jax.Array, cfg: EngineConfig,
+                         k: int):
+    """Like query_full_scan but also returns the vectors f32[B, k, D]
+    (used by the fused RAG serving path to splice memories into the prompt)."""
+    rows, ids = _flat_rows(state)
+    scores = ops.scan_scores(
+        q, rows, ids, _metric_norms(rows, cfg.metric), metric=cfg.metric,
+        use_kernel=cfg.use_kernel, fused_conversion=cfg.fused_conversion,
+        interpret=cfg.interpret)
+    top, idx = jax.lax.top_k(_order_scores(scores, cfg.metric), k)
+    return ids[idx], top, rows[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "nprobe"))
+def query_probed(state: IVFState, q: jax.Array, cfg: EngineConfig,
+                 k: int, nprobe: int) -> Tuple[jax.Array, jax.Array]:
+    """Latency template: IVF probe path for small query batches.
+
+    Centroid scores are one small GEMM; each query then gathers its nprobe
+    lists (contiguous slabs, not random probes) and runs one fused scan over
+    [nprobe*L + spill] rows.  Sequential over queries (lax.map) to bound the
+    working set — the windowed-submission idea applied inside the op.
+    """
+    c, l, d = state.lists.shape
+    cvalid = jnp.arange(state.n_clusters, dtype=jnp.int32)
+    cscores = ops.scan_scores(
+        q, state.centroids, cvalid, _metric_norms(state.centroids, cfg.metric),
+        metric=cfg.metric, use_kernel=cfg.use_kernel,
+        fused_conversion=cfg.fused_conversion, interpret=cfg.interpret)
+    _, probes = jax.lax.top_k(_order_scores(cscores, cfg.metric), nprobe)
+
+    spill_rows, spill_ids = state.spill, state.spill_ids
+
+    def one(args):
+        qi, pi = args                                   # [D], [nprobe]
+        rows = state.lists[pi].reshape(nprobe * l, d)   # contiguous slabs
+        rids = state.list_ids[pi].reshape(nprobe * l)
+        rows = jnp.concatenate([rows, spill_rows], axis=0)
+        rids = jnp.concatenate([rids, spill_ids], axis=0)
+        s = ops.scan_scores(
+            qi[None], rows, rids, _metric_norms(rows, cfg.metric),
+            metric=cfg.metric, use_kernel=cfg.use_kernel,
+            fused_conversion=cfg.fused_conversion, interpret=cfg.interpret)
+        top, idx = jax.lax.top_k(_order_scores(s, cfg.metric)[0], k)
+        return rids[idx], top
+
+    ids_k, scores_k = jax.lax.map(one, (q, probes))
+    return ids_k, scores_k
+
+
+# ---------------------------------------------------------------------------
+# Stats
+# ---------------------------------------------------------------------------
+
+def stats(state: IVFState) -> dict:
+    sizes = jax.device_get(state.list_sizes)
+    return {
+        "n_clusters": state.n_clusters,
+        "dim": state.dim,
+        "list_capacity": state.list_capacity,
+        "live": int(jax.device_get(live_count(state))),
+        "spill": int(jax.device_get(state.spill_size)),
+        "deleted": int(jax.device_get(state.num_deleted)),
+        "max_list": int(sizes.max()),
+        "mean_list": float(sizes.mean()),
+    }

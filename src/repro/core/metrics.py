@@ -1,0 +1,30 @@
+"""Retrieval quality metrics (paper: Recall@K vs ground-truth neighbors)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def brute_force_topk(queries, rows, ids, k: int, metric: str = "ip"):
+    """Exact fp32 ground truth (the paper's Flat baseline)."""
+    q = jnp.asarray(queries, jnp.float32)
+    r = jnp.asarray(rows, jnp.float32)
+    scores = q @ r.T
+    if metric == "l2":
+        scores = -(jnp.sum(r * r, axis=1)[None, :] - 2.0 * scores)
+    valid = jnp.asarray(ids) >= 0
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    _, idx = jax.lax.top_k(scores, k)
+    return np.asarray(jnp.asarray(ids)[idx])
+
+
+def recall_at_k(got_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Fraction of ground-truth neighbors returned (Recall@K)."""
+    got_ids = np.asarray(got_ids)
+    true_ids = np.asarray(true_ids)
+    assert got_ids.shape == true_ids.shape
+    hits = 0
+    for g, t in zip(got_ids, true_ids):
+        hits += len(set(g.tolist()) & set(t.tolist()))
+    return hits / true_ids.size

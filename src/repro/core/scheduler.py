@@ -1,0 +1,179 @@
+"""Windowed Batch Submission scheduler (paper §4.3 'Memory-efficient Scheduler').
+
+The paper's core trade-off: submitting *all* tasks at once maximizes pipeline
+occupancy but the in-flight working set peaks unacceptably; one-task-per-
+worker keeps memory flat but starves the pipeline with bubbles.  Their
+resolution — and ours — is a bounded submission window over a single global
+queue that backend-bound workers *pull* from: peak memory is O(window), load
+balancing is implicit (faster backends pull more), and there is no central
+dispatcher.
+
+On this host the "backends" are worker threads that each own a class of
+device work (latency / throughput / background — the template classes from
+templates.py).  Dispatched JAX computations are async anyway; workers block
+on completion so in-flight device memory is truly bounded by the window.
+
+Modes for the Fig. 7 benchmark: "windowed" (AME), "all" (flood), "serial"
+(one at a time).
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+
+@dataclass
+class Task:
+    fn: Callable[[], Any]
+    kind: str                    # query | insert | rebuild | ...
+    backend: str                 # latency | throughput | background
+    priority: int = 0
+    size_bytes: int = 0
+    submit_t: float = 0.0
+    start_t: float = 0.0
+    end_t: float = 0.0
+    result: Any = None
+    error: Optional[BaseException] = None
+    done: threading.Event = field(default_factory=threading.Event)
+
+    @property
+    def queue_wait(self) -> float:
+        return self.start_t - self.submit_t
+
+    @property
+    def latency(self) -> float:
+        return self.end_t - self.submit_t
+
+
+class WindowedScheduler:
+    """Worker-pulled, windowed-batch-submission task scheduler."""
+
+    def __init__(self, window: int = 8, mode: str = "windowed",
+                 backends: Dict[str, int] | None = None):
+        assert mode in ("windowed", "all", "serial")
+        self.window = window if mode == "windowed" else (1 if mode == "serial" else 1 << 30)
+        self.mode = mode
+        # worker threads per backend class (paper: workers bound to CPU/GPU/NPU)
+        self.backends = backends or {"latency": 1, "throughput": 1, "background": 1}
+        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._sem = threading.Semaphore(self.window)
+        self._stop = threading.Event()
+        self._seq = 0
+        self._lock = threading.Lock()
+        self.completed: List[Task] = []
+        self._peak_inflight_bytes = 0
+        self._inflight_bytes = 0
+        self._threads: List[threading.Thread] = []
+        for backend, n in self.backends.items():
+            for i in range(n):
+                t = threading.Thread(
+                    target=self._worker, args=(backend,),
+                    name=f"ame-{backend}-{i}", daemon=True)
+                t.start()
+                self._threads.append(t)
+
+    # ------------------------------------------------------------------
+    def submit(self, task: Task, block: bool = True) -> Task:
+        """Windowed submission: blocks while `window` tasks are in flight."""
+        self._sem.acquire()
+        task.submit_t = time.perf_counter()
+        with self._lock:
+            self._seq += 1
+            self._inflight_bytes += task.size_bytes
+            self._peak_inflight_bytes = max(self._peak_inflight_bytes,
+                                            self._inflight_bytes)
+            seq = self._seq
+        self._q.put((task.priority, seq, task))
+        if block and self.mode == "serial":
+            task.done.wait()
+        return task
+
+    def map(self, tasks: List[Task]) -> List[Task]:
+        for t in tasks:
+            self.submit(t)
+        for t in tasks:
+            t.done.wait()
+        return tasks
+
+    def drain(self):
+        self._q.join()
+
+    def shutdown(self):
+        self._stop.set()
+        for _ in self._threads:
+            self._q.put((1 << 30, 1 << 30, None))
+        for t in self._threads:
+            t.join(timeout=5)
+
+    # ------------------------------------------------------------------
+    def _worker(self, backend: str):
+        while not self._stop.is_set():
+            prio, seq, task = self._q.get()
+            if task is None:
+                self._q.task_done()
+                return
+            # backend binding: a worker only takes its own class; others are
+            # re-queued (cheap — queue ops are ~us, device work is ~ms).
+            if task.backend != backend and not self._claimable(task, backend):
+                self._q.put((prio, seq, task))
+                self._q.task_done()
+                time.sleep(0.0002)
+                continue
+            task.start_t = time.perf_counter()
+            try:
+                out = task.fn()
+                out = jax.block_until_ready(out) if out is not None else None
+                task.result = out
+            except BaseException as e:   # noqa: BLE001 - reported to caller
+                task.error = e
+            task.end_t = time.perf_counter()
+            with self._lock:
+                self._inflight_bytes -= task.size_bytes
+                self.completed.append(task)
+            self._sem.release()
+            task.done.set()
+            self._q.task_done()
+
+    def _claimable(self, task: Task, backend: str) -> bool:
+        """Work stealing: idle latency workers may take background work,
+        never the reverse (latency tasks only run on the latency backend
+        when one exists — keeps query tail latency isolated from rebuilds).
+        """
+        if backend == "latency":
+            return False                      # latency workers stay reserved
+        if task.backend == "latency":
+            return backend == "throughput" and self._q.qsize() > 0
+        return True                           # throughput/background steal freely
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            done = list(self.completed)
+            peak = self._peak_inflight_bytes
+        by_kind: Dict[str, List[Task]] = collections.defaultdict(list)
+        for t in done:
+            by_kind[t.kind].append(t)
+
+        def pct(xs, p):
+            if not xs:
+                return 0.0
+            xs = sorted(xs)
+            return xs[min(len(xs) - 1, int(p * len(xs)))]
+
+        out = {"peak_inflight_bytes": peak, "completed": len(done)}
+        for kind, ts in by_kind.items():
+            lats = [t.latency for t in ts]
+            waits = [t.queue_wait for t in ts]
+            out[kind] = {
+                "n": len(ts),
+                "p50_ms": 1e3 * pct(lats, 0.50),
+                "p99_ms": 1e3 * pct(lats, 0.99),
+                "mean_wait_ms": 1e3 * (sum(waits) / len(waits)),
+            }
+        return out

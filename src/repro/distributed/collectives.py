@@ -1,0 +1,51 @@
+"""Distributed-optimization helpers: gradient compression, hierarchical sums.
+
+Gradient compression (1000-node readiness): casting gradients to bf16 (or
+stochastic-rounded int8) before the data-parallel reduction halves (quarters)
+the DP all-reduce volume — the dominant collective for large dense models.
+Under GSPMD the reduction is implicit in the sharded autodiff, so we express
+compression as a cast *on the gradient pytree* at the psum boundary: jit'd
+train_step applies `compress` to grads before the optimizer; the all-reduce
+XLA emits then moves the compressed dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads, scheme: str, key=None):
+    """scheme: none | bf16 | int8 (int8 = stochastic-rounded block-scaled)."""
+    if scheme == "none":
+        return grads
+    if scheme == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    if scheme == "int8":
+        assert key is not None
+
+        def q(g, k):
+            g32 = g.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+            noise = jax.random.uniform(k, g.shape) - 0.5
+            qv = jnp.clip(jnp.round(g32 / scale + noise), -127, 127)
+            return qv.astype(jnp.int8), scale
+
+        leaves, treedef = jax.tree.flatten(grads)
+        keys = jax.random.split(key, len(leaves))
+        out = [q(g, k) for g, k in zip(leaves, keys)]
+        return treedef.unflatten(out)
+    raise ValueError(scheme)
+
+
+def decompress_grads(grads, scheme: str):
+    if scheme in ("none", "bf16"):
+        return jax.tree.map(lambda g: g.astype(jnp.float32), grads,
+                            is_leaf=lambda x: isinstance(x, jax.Array))
+    if scheme == "int8":
+        def dq(leaf):
+            qv, scale = leaf
+            return qv.astype(jnp.float32) * scale
+        return jax.tree.map(dq, grads,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and len(x) == 2)
+    raise ValueError(scheme)

@@ -1,0 +1,44 @@
+"""Elastic scaling: rebuild the mesh from the live device set and reshard.
+
+Checkpoints store full (unsharded) arrays, so a run that loses a host can
+restart on any device count whose factorization supports the parallelism
+plan: we pick the largest (data, model) grid that fits the live devices,
+rebuild shardings from the same logical rules, and device_put the restored
+pytree.  The same path implements scale-UP (new pods joining).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+
+
+def best_grid(n_devices: int, model_pref: int = 16) -> Tuple[int, int]:
+    """(data, model) grid with data*model = n; model_pref wins when it
+    divides, else the largest power-of-two model axis that does."""
+    cands = [model_pref] + [m for m in (16, 8, 4, 2, 1) if m != model_pref]
+    for m in cands:
+        if m <= n_devices and n_devices % m == 0:
+            return (n_devices // m, m)
+    return (n_devices, 1)
+
+
+def remesh(devices=None, model_pref: int = 16) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    data, model = best_grid(len(devices), model_pref)
+    import numpy as np
+    arr = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_restore(ckpt, tree_like, mesh: Mesh, cfg: ModelConfig,
+                    step: Optional[int] = None):
+    """Restore a checkpoint into a NEW mesh topology (elastic restart)."""
+    from repro.models import specs as pspecs
+    from repro.models.sharding import use_mesh
+    with use_mesh(mesh):
+        shardings = pspecs.param_shardings(cfg, mesh)
+    return ckpt.restore(tree_like, step=step, shardings=shardings)

@@ -1,0 +1,84 @@
+"""Fault tolerance: preemption handling + straggler detection.
+
+TPU pods are bulk-synchronous SPMD: a straggling host slows every step, and
+preemptions kill the whole slice.  The production loop therefore needs
+(a) checkpoint-on-SIGTERM at the next step boundary, (b) per-step timing
+statistics that flag outlier hosts so the orchestrator can drain + remesh
+(see elastic.py), and (c) bounded-staleness detection for the async
+checkpointer.
+"""
+from __future__ import annotations
+
+import collections
+import signal
+import threading
+import time
+from typing import Deque, Optional
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> request a checkpoint at the next step boundary."""
+
+    def __init__(self, install: bool = True):
+        self._requested = threading.Event()
+        self._prev = {}
+        if install:
+            for sig in (signal.SIGTERM,):
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:
+                    pass   # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self._requested.set()
+
+    def request(self):
+        self._requested.set()
+
+    @property
+    def should_checkpoint(self) -> bool:
+        return self._requested.is_set()
+
+    def reset(self):
+        self._requested.clear()
+
+
+class StragglerMonitor:
+    """Ring buffer of step durations; flags steps beyond median * threshold.
+
+    On a real pod each host reports its own step time to the coordinator;
+    here the same logic runs per-process and the trainer exposes the flags.
+    """
+
+    def __init__(self, window: int = 64, threshold: float = 2.0):
+        self.durations: Deque[float] = collections.deque(maxlen=window)
+        self.threshold = threshold
+        self.flagged = 0
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> dict:
+        assert self._t0 is not None
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        out = {"step_s": dt, "straggler": False}
+        if len(self.durations) >= 8:
+            med = sorted(self.durations)[len(self.durations) // 2]
+            if dt > self.threshold * med:
+                self.flagged += 1
+                out["straggler"] = True
+        self.durations.append(dt)
+        return out
+
+    def stats(self) -> dict:
+        if not self.durations:
+            return {"n": 0}
+        ds = sorted(self.durations)
+        return {
+            "n": len(ds),
+            "p50_s": ds[len(ds) // 2],
+            "p95_s": ds[min(len(ds) - 1, int(0.95 * len(ds)))],
+            "flagged": self.flagged,
+        }

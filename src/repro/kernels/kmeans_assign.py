@@ -1,0 +1,140 @@
+"""Streaming k-means assignment kernel.
+
+For each database row find the nearest centroid under L2:
+
+  argmin_c ||x - c||^2  ==  argmin_c ( ||c||^2 - 2 x.c )
+
+The naive path materializes the full [M, C] distance matrix in HBM
+(M = millions of rows).  This kernel streams centroid blocks through VMEM,
+keeping only a running (min, argmin) pair per row block — the [M, C] matrix
+never exists.  This is the TPU version of AME's insight that index build /
+insert assignment is a GEMM, tiled for the on-chip memory (TCM -> VMEM).
+
+fp32 -> bf16 conversion for the MXU happens in-register per tile, same as
+``scan_scores`` (the Data Adaptation Layer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _assign_kernel(
+    x_ref,        # [bm, bk] fp32
+    c_ref,        # [bc, bk] fp32
+    cnorm_ref,    # [1, bc] fp32
+    dist_out,     # [bm, 1] fp32
+    idx_out,      # [bm, 1] int32
+    best_ref,     # scratch [bm, 1] fp32
+    arg_ref,      # scratch [bm, 1] int32
+    acc_ref,      # scratch [bm, bc] fp32
+    *,
+    c_steps: int,
+    k_steps: int,
+    block_c: int,
+    fused_conversion: bool,
+    compute_dtype,
+):
+    j = pl.program_id(1)   # centroid block
+    k = pl.program_id(2)   # feature (D) block
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_best():
+        best_ref[...] = jnp.full_like(best_ref, jnp.inf)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    c = c_ref[...]
+    if fused_conversion:
+        x = x.astype(compute_dtype)
+        c = c.astype(compute_dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _reduce():
+        # dist-squared modulo the per-row ||x||^2 constant
+        d = cnorm_ref[0, :][None, :] - 2.0 * acc_ref[...]          # [bm, bc]
+        local_min = jnp.min(d, axis=1, keepdims=True)              # [bm, 1]
+        local_arg = jnp.argmin(d, axis=1).astype(jnp.int32)[:, None] + j * block_c
+        improved = local_min < best_ref[...]
+        arg_ref[...] = jnp.where(improved, local_arg, arg_ref[...])
+        best_ref[...] = jnp.minimum(local_min, best_ref[...])
+
+        @pl.when(j == c_steps - 1)
+        def _write():
+            dist_out[...] = best_ref[...]
+            idx_out[...] = arg_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_c", "block_k", "fused_conversion",
+                     "interpret", "compute_dtype"),
+)
+def kmeans_assign(
+    x: jax.Array,            # fp32[M, D]
+    centroids: jax.Array,    # fp32[C, D]
+    *,
+    block_m: int = 256,
+    block_c: int = 256,
+    block_k: int = 512,
+    fused_conversion: bool = True,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool = False,
+):
+    """Returns (idx int32[M], dist fp32[M]): nearest centroid per row.
+
+    ``dist`` omits the per-row ||x||^2 term (rank-invariant).  Shapes must be
+    pre-padded to block multiples (``ops.kmeans_assign`` pads).
+    """
+    m, d = x.shape
+    c, d2 = centroids.shape
+    assert d == d2
+    assert m % block_m == 0 and c % block_c == 0 and d % block_k == 0, (
+        (x.shape, centroids.shape, block_m, block_c, block_k))
+
+    cnorms = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)
+
+    c_steps = c // block_c
+    k_steps = d // block_k
+    grid = (m // block_m, c_steps, k_steps)
+
+    kernel = functools.partial(
+        _assign_kernel,
+        c_steps=c_steps, k_steps=k_steps, block_c=block_c,
+        fused_conversion=fused_conversion, compute_dtype=compute_dtype,
+    )
+    dist, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_c, block_k), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, block_c), lambda i, j, k: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, 1), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.int32),
+            pltpu.VMEM((block_m, block_c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, centroids, cnorms[None, :])
+    return idx[:, 0], dist[:, 0]

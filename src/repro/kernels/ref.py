@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+These are also the "naive port" baselines for the ablation benchmarks: they
+materialize intermediates in HBM exactly the way the paper says a direct
+server-to-mobile port would.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def scan_scores_ref(q, db, ids, db_norms=None, *, metric="ip",
+                    fused_conversion=True, compute_dtype=jnp.bfloat16):
+    """Oracle for kernels.scan_scores (same bf16 rounding as the kernel)."""
+    if fused_conversion:
+        q = q.astype(compute_dtype)
+        db = db.astype(compute_dtype)
+    scores = jax.lax.dot_general(
+        q, db, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if metric == "l2":
+        if db_norms is None:
+            db_norms = jnp.sum(db.astype(jnp.float32) ** 2, axis=1)
+        scores = db_norms[None, :] - 2.0 * scores
+    # IP maximizes (mask -inf); L2 minimizes distances (mask +inf).
+    mask_val = float("inf") if metric == "l2" else NEG_INF
+    return jnp.where((ids >= 0)[None, :], scores, mask_val)
+
+
+def kmeans_assign_ref(x, centroids, *, fused_conversion=True,
+                      compute_dtype=jnp.bfloat16):
+    """Oracle for kernels.kmeans_assign: (idx, dist-modulo-||x||^2)."""
+    xc, cc = (x, centroids)
+    if fused_conversion:
+        xc = x.astype(compute_dtype)
+        cc = centroids.astype(compute_dtype)
+    dots = jax.lax.dot_general(
+        xc, cc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    cnorms = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)
+    d = cnorms[None, :] - 2.0 * dots            # [M, C]
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)
+
+
+def segsum_gemm_ref(x, assign, *, n_clusters):
+    """Oracle for kernels.segsum_gemm: (sums fp32[C,D], counts fp32[C])."""
+    onehot = jax.nn.one_hot(assign, n_clusters, dtype=jnp.float32)   # [M, C]
+    sums = jnp.einsum("mc,md->cd", onehot, x.astype(jnp.float32))
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts

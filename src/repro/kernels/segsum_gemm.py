@@ -1,0 +1,112 @@
+"""Centroid-update as a dense one-hot GEMM (paper T2, literally).
+
+Given rows X fp32[M, D] and assignments a int32[M], compute per-cluster sums
+
+  sums[c] = sum_{m : a[m]=c} X[m]     == A^T X,  A[m,c] = (a[m] == c)
+
+and counts[c] = sum_m A[m,c].  The paper's point is that on a matrix engine
+this *is* a GEMM: build the one-hot tile in-register (iota == compare) and
+feed the MXU, instead of scalar scatter-adds.  Tile-aligned cluster counts
+(C % 128 == 0) keep every MXU pass fully occupied — misaligned C fragments
+the final tile, the effect the paper measures in Fig. 9.
+
+Accumulation is fp32 (counts must be exact; one-hot operands are exact in
+bf16, so MXU bf16 passes still give exact integer sums for M < 2^24 per tile
+— we nevertheless accumulate in fp32 scratch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum_kernel(
+    a_ref,       # [1, bm] int32 assignments
+    x_ref,       # [bm, bd] fp32
+    sums_out,    # [bc, bd] fp32
+    counts_out,  # [bc, 1] fp32
+    acc_ref,     # scratch [bc, bd] fp32
+    cnt_ref,     # scratch [bc, 1] fp32
+    *,
+    m_steps: int,
+    block_c: int,
+    compute_dtype,
+):
+    j = pl.program_id(1)   # cluster block
+    k = pl.program_id(2)   # row (M) block
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    a = a_ref[0, :]                                           # [bm]
+    cluster_ids = j * block_c + jax.lax.iota(jnp.int32, block_c)
+    onehot = (a[None, :] == cluster_ids[:, None])             # [bc, bm] bool
+    oh = onehot.astype(compute_dtype)
+    x = x_ref[...].astype(compute_dtype)
+    # sums_tile = onehot @ X : MXU GEMM with an in-register one-hot operand
+    acc_ref[...] += jax.lax.dot_general(
+        oh, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    cnt_ref[...] += jnp.sum(onehot, axis=1, dtype=jnp.float32)[:, None]
+
+    @pl.when(k == m_steps - 1)
+    def _write():
+        sums_out[...] = acc_ref[...]
+        counts_out[...] = cnt_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_clusters", "block_m", "block_c", "block_d",
+                     "interpret", "compute_dtype"),
+)
+def segsum_gemm(
+    x: jax.Array,          # fp32[M, D]
+    assign: jax.Array,     # int32[M] in [0, n_clusters) ; <0 = ignore row
+    *,
+    n_clusters: int,
+    block_m: int = 512,
+    block_c: int = 256,
+    block_d: int = 512,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool = False,
+):
+    """Returns (sums fp32[C, D], counts fp32[C]). Shapes pre-padded to blocks."""
+    m, d = x.shape
+    assert m % block_m == 0 and d % block_d == 0 and n_clusters % block_c == 0, (
+        (x.shape, n_clusters, block_m, block_c, block_d))
+    m_steps = m // block_m
+    grid = (d // block_d, n_clusters // block_c, m_steps)
+
+    kernel = functools.partial(
+        _segsum_kernel, m_steps=m_steps, block_c=block_c,
+        compute_dtype=compute_dtype,
+    )
+    sums, counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m), lambda i, j, k: (0, k)),
+            pl.BlockSpec((block_m, block_d), lambda i, j, k: (k, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_c, block_d), lambda i, j, k: (j, i)),
+            pl.BlockSpec((block_c, 1), lambda i, j, k: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_clusters, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_clusters, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_c, block_d), jnp.float32),
+            pltpu.VMEM((block_c, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(assign[None, :], x)
+    return sums, counts[:, 0]

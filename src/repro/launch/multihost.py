@@ -1,0 +1,59 @@
+"""Multi-host initialization for real-cluster launches.
+
+On a TPU pod slice each host runs the same program; `init()` wires them into
+one JAX runtime (coordinator discovery via env or args) so `jax.devices()`
+spans the slice and the production mesh covers every chip.  On GCE TPU VMs
+the locals are auto-detected; on other schedulers (SLURM / k8s) pass or
+export the three variables.
+
+    # host 0                         # host i
+    COORDINATOR=host0:8476 \
+    NUM_PROCESSES=64 PROCESS_ID=0    ... PROCESS_ID=i \
+      python -m repro.launch.train --arch gemma2-9b --full --production-mesh
+
+The CPU container never calls this (single-process paths are the default
+everywhere); it exists so the same entry points run unchanged on a cluster.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+
+def init(coordinator: Optional[str] = None,
+         num_processes: Optional[int] = None,
+         process_id: Optional[int] = None) -> bool:
+    """jax.distributed.initialize from args/env; False if single-process."""
+    import jax
+
+    coordinator = coordinator or os.environ.get("COORDINATOR")
+    num_processes = num_processes or _int_env("NUM_PROCESSES")
+    process_id = process_id if process_id is not None else _int_env(
+        "PROCESS_ID")
+    if coordinator is None and num_processes is None:
+        # TPU VM metadata path: jax auto-discovers peers
+        if os.environ.get("TPU_WORKER_HOSTNAMES"):
+            jax.distributed.initialize()
+            return True
+        return False
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    return True
+
+
+def _int_env(name: str) -> Optional[int]:
+    v = os.environ.get(name)
+    return int(v) if v is not None else None
+
+
+def host_info() -> dict:
+    import jax
+    return {
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": len(jax.local_devices()),
+        "global_devices": len(jax.devices()),
+    }

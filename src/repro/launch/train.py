@@ -1,0 +1,88 @@
+"""Training driver: ``python -m repro.launch.train --arch granite-3-2b``.
+
+On the CPU container this runs REDUCED configs (--reduced, default) with a
+synthetic corpus; on a real cluster the same entry point takes the full
+config, the production mesh, and a memmap token dataset.  Fault tolerance
+(checkpoint/restart, preemption, straggler monitor) is always active.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import TokenDataset, Prefetcher
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.train.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.list_archs())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=("none", "bf16", "int8"))
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    help="full config (needs the production mesh)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-dir", default=None,
+                    help="directory of uint32 .bin token shards "
+                         "(synthetic corpus when omitted)")
+    ap.add_argument("--multihost", action="store_true",
+                    help="jax.distributed.initialize from COORDINATOR/"
+                         "NUM_PROCESSES/PROCESS_ID env (cluster launches)")
+    args = ap.parse_args(argv)
+
+    if args.multihost:
+        from repro.launch import multihost
+        if multihost.init():
+            print(f"multihost: {multihost.host_info()}")
+
+    cfg = (registry.reduced_arch(args.arch) if args.reduced
+           else registry.get_arch(args.arch))
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1),
+                     grad_accum=args.grad_accum,
+                     grad_compression=args.grad_compression, seed=args.seed)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else None)
+
+    print(f"arch={cfg.name} params={cfg.param_count():,} "
+          f"(active {cfg.active_param_count():,}) reduced={args.reduced}")
+    trainer = Trainer(cfg, tc, mesh=mesh, checkpoint_dir=args.checkpoint_dir,
+                      checkpoint_every=args.checkpoint_every,
+                      install_signals=True)
+    if trainer.maybe_restore():
+        print(f"restored from step {trainer.step_num}")
+
+    ds = TokenDataset(args.data_dir, vocab_size=cfg.vocab_size,
+                      seq_len=args.seq, batch_size=args.batch,
+                      seed=args.seed,
+                      synthetic_tokens=max(1 << 18,
+                                           args.batch * args.seq * 8))
+    batches = Prefetcher(api.adapt_batches(ds, cfg, seed=args.seed), depth=2)
+
+    hist = trainer.train(batches, args.steps, log_every=args.log_every)
+    final = hist[-1] if hist else {}
+    print(f"done: step={trainer.step_num} loss={final.get('loss', 'n/a')}")
+    if args.checkpoint_dir:
+        trainer.save(async_=False)
+        print(f"checkpointed to {args.checkpoint_dir}")
+
+
+if __name__ == "__main__":
+    main()

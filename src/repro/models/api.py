@@ -1,0 +1,122 @@
+"""Model-facing helpers: input specs per (arch x shape), batch synthesis.
+
+`input_specs` returns ShapeDtypeStructs (no allocation) for the dry-run;
+`synth_batch` materializes small random batches for smoke tests / examples.
+The [audio]/[vlm] modality frontends are stubs per the assignment: specs
+include precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _vis_len(cfg: ModelConfig, seq: int) -> int:
+    return min(1024, max(seq // 4, 4))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        v = _vis_len(cfg, s)
+        specs["vis_embeds"] = jax.ShapeDtypeStruct((b, v, cfg.d_model), dt)
+        specs["mrope_pos"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    if cfg.family == "encdec":
+        # half source frames (stubbed audio encoder output), half target text
+        specs = {
+            "src_emb": jax.ShapeDtypeStruct((b, s // 2, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((b, s // 2), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s // 2), jnp.int32),
+        }
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("targets", None)
+    return specs
+
+
+def decode_inputs_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(token, caches, pos) specs for serve_step at KV length seq_len."""
+    from repro.models import lm
+    b, s = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    caches = jax.eval_shape(
+        lambda: lm.init_caches(cfg, b, s, jnp.dtype(cfg.dtype)))
+    if cfg.family == "encdec":
+        enc_len = s // 2
+        kv = jax.eval_shape(lambda: lm.init_caches(cfg, b, enc_len,
+                                                   jnp.dtype(cfg.dtype)))
+        caches = {"self": caches["self"], "cross": kv["self"]}
+    return token, caches, pos
+
+
+def adapt_token_batch(batch: Dict[str, "np.ndarray"], cfg: ModelConfig,
+                      rng: "np.random.Generator"):
+    """Adapt a {tokens, targets} pipeline batch to a family's train inputs.
+
+    VLM gains stub patch embeddings + M-RoPE positions; enc-dec splits the
+    window into stub source frames (first half, embedded) and target text
+    (second half).  Dense/MoE/SSM/hybrid pass through.
+    """
+    if cfg.family == "vlm":
+        b, s = batch["tokens"].shape
+        v = _vis_len(cfg, s)
+        batch = dict(batch)
+        batch["vis_embeds"] = rng.standard_normal(
+            (b, v, cfg.d_model), dtype=np.float32)
+        pos = np.broadcast_to(np.arange(s, dtype=np.int32)[None, :, None],
+                              (b, s, 3))
+        batch["mrope_pos"] = np.ascontiguousarray(pos)
+        return batch
+    if cfg.family == "encdec":
+        b, s = batch["tokens"].shape
+        half = s // 2
+        return {
+            "src_emb": rng.standard_normal(
+                (b, half, cfg.d_model), dtype=np.float32),
+            "tokens": batch["tokens"][:, half: 2 * half],
+            "targets": batch["targets"][:, half: 2 * half],
+        }
+    return batch
+
+
+def adapt_batches(it, cfg: ModelConfig, seed: int = 0):
+    """Iterator wrapper applying `adapt_token_batch` to a pipeline stream."""
+    rng = np.random.default_rng(seed)
+    for batch in it:
+        yield adapt_token_batch(batch, cfg, rng)
+
+
+def synth_batch(key, cfg: ModelConfig, kind: str, batch: int, seq: int):
+    """Small random batch for smoke tests."""
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        se = st = seq // 2
+        out = {"src_emb": jax.random.normal(ks[0], (batch, se, cfg.d_model), dt),
+               "tokens": jax.random.randint(ks[1], (batch, st), 0, cfg.vocab_size)}
+        if kind == "train":
+            out["targets"] = jax.random.randint(ks[2], (batch, st), 0,
+                                                cfg.vocab_size)
+        return out
+    out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)}
+    if kind == "train":
+        out["targets"] = jax.random.randint(ks[1], (batch, seq), 0,
+                                            cfg.vocab_size)
+    if cfg.family == "vlm":
+        v = _vis_len(cfg, seq)
+        out["vis_embeds"] = jax.random.normal(ks[2], (batch, v, cfg.d_model), dt)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, :, None], (batch, seq, 3))
+        out["mrope_pos"] = pos.astype(jnp.int32)
+    return out

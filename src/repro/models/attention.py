@@ -1,0 +1,292 @@
+"""Attention: chunked (flash-style) prefill/train + KV-cached decode.
+
+Prefill/train never materializes the [S, S] score matrix: a lax.scan over KV
+chunks carries online-softmax stats (m, l, acc) — O(S * chunk) memory, which
+is what makes prefill_32k lowerable at all.  Supports GQA, sliding windows
+(gemma2 local layers), logit softcapping, causal and cross (enc-dec) modes.
+
+Sharding: q/k/v heads shard over 'model' (all archs pad q-heads to a
+multiple of the model axis where needed — see DESIGN.md §Arch-applicability);
+decode KV caches shard over kv-heads when divisible, else over the sequence
+axis ('seq_kv'), in which case XLA inserts the flash-decoding style partial
+softmax reductions over the model axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.sharding import shard
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array           # [B, S_max, KVH, Dh]
+    v: jax.Array           # [B, S_max, KVH, Dh]
+
+    @staticmethod
+    def init(batch: int, s_max: int, kvh: int, dh: int, dtype) -> "KVCache":
+        z = jnp.zeros((batch, s_max, kvh, dh), dtype)
+        return KVCache(k=z, v=z)
+
+    def shardit(self) -> "KVCache":
+        # Same policy as specs.cache_specs: prefer collective-free kv-head TP;
+        # the sequence axis takes 'model' only as a fallback (flash-decoding
+        # partial reductions), and takes the data axes when the batch is too
+        # small to DP-shard (long_500k).
+        from repro.models.sharding import current_mesh
+        mesh = current_mesh()
+        if mesh is None:
+            return self
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        m = sizes.get("model", 1)
+        dp = 1
+        for a in ("pod", "data"):
+            dp *= sizes.get(a, 1)
+        b, _, kvh, _ = self.k.shape
+        kv_tp = kvh % m == 0
+        if b % dp == 0:
+            seq_l = None if kv_tp else "seq_kv"
+            logical = ("batch", seq_l, "model" if kv_tp else None, None)
+        else:
+            seq_l = "seq_data" if kv_tp else "seq_all"
+            logical = (None, seq_l, "model" if kv_tp else None, None)
+        return KVCache(k=shard(self.k, *logical),
+                       v=shard(self.v, *logical))
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, d_model: Optional[int] = None,
+              heads: Optional[int] = None, kv_heads: Optional[int] = None,
+              head_dim: Optional[int] = None):
+    d = d_model or cfg.d_model
+    h = heads or cfg.num_heads
+    kvh = kv_heads or cfg.num_kv_heads
+    dh = head_dim or cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, h, dh)),
+        "wk": layers.dense_init(ks[1], (d, kvh, dh)),
+        "wv": layers.dense_init(ks[2], (d, kvh, dh)),
+        "wo": layers.dense_init(ks[3], (h, dh, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, mrope_pos=None):
+    dt = x.dtype
+    q = jnp.einsum("...d,dhk->...hk", x, p["wq"].astype(dt))
+    k = jnp.einsum("...d,dhk->...hk", x, p["wk"].astype(dt))
+    v = jnp.einsum("...d,dhk->...hk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope_sections and mrope_pos is not None:
+        q = layers.apply_mrope(q, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+        k = layers.apply_mrope(k, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+    elif positions is not None:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    return q, k, v
+
+
+def _out_proj(p, o):
+    return jnp.einsum("...hk,hkd->...d", o, p["wo"].astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (prefill / train)
+# ---------------------------------------------------------------------------
+
+def _softcap(logits, cap: float):
+    return cap * jnp.tanh(logits / cap) if cap else logits
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, chunk: int = 1024,
+                    kv_offset: int = 0) -> jax.Array:
+    """q [B,Sq,H,Dh]; k,v [B,Sk,KVH,Dh] -> [B,Sq,H,Dh].
+
+    Online-softmax scan over KV chunks; GQA via head-group reshape.
+    `window > 0` = sliding-window (local) attention over the last `window`
+    keys.  `kv_offset` shifts absolute key positions (decode refill).
+    """
+    b, sq, h, dh = q.shape
+    _, sk, kvh, _ = k.shape
+    assert h % kvh == 0
+    g = h // kvh
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scale = dh ** -0.5
+    qpos = kv_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kci, vci, ci = inp                                  # [B,chunk,KVH,Dh]
+        kpos = ci * chunk + jnp.arange(chunk)               # absolute
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kci,
+                       preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, softcap)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        # window may be a traced per-layer scalar (gemma2 alternation); <=0 = global
+        w = jnp.asarray(window, jnp.int32)
+        mask &= (w <= 0) | (qpos[:, None] - kpos[None, :] < w)
+        mask &= (kpos < sk + kv_offset)[None, :] & (kpos >= 0)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, dh), jnp.float32)
+    # remat per KV chunk: recompute the [*, chunk] logit tile in backward
+    # instead of saving it (flash-attention memory discipline)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cached decode attention (one new token)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, cache: KVCache, pos, *, window: int = 0,
+                     softcap: float = 0.0) -> jax.Array:
+    """q [B,1,H,Dh]; cache K/V [B,Smax,KVH,Dh]; pos i32[B] = current index.
+
+    Scores the single query against the whole (masked) cache.  With the
+    cache sequence-sharded over 'model', XLA lowers this to flash-decoding:
+    partial max/sum + psum over the model axis.
+    """
+    b, _, h, dh = q.shape
+    _, smax, kvh, _ = cache.k.shape
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, cache.k,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    s = _softcap(s, softcap)
+    kpos = jnp.arange(smax)
+    mask = kpos[None, :] <= pos[:, None]                    # causal vs cache
+    w = jnp.asarray(window, jnp.int32)                      # may be traced
+    mask &= (w <= 0) | (kpos[None, :] > (pos[:, None] - w))
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cache.v.dtype), cache.v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos) -> KVCache:
+    """Write k/v [B,1,KVH,Dh] at per-row positions pos i32[B]."""
+    b = k_new.shape[0]
+    rows = jnp.arange(b)
+    k = cache.k.at[rows, pos].set(k_new[:, 0])
+    v = cache.v.at[rows, pos].set(v_new[:, 0])
+    return KVCache(k=k, v=v).shardit()
+
+
+# ---------------------------------------------------------------------------
+# full block-level entry points
+# ---------------------------------------------------------------------------
+
+def decode_attention_stacked(p, x, cfg: ModelConfig, ck, cv, layer: int, *,
+                             positions, mrope_pos=None, pos, window=0):
+    """Decode step against STACKED caches ck/cv [L,B,Smax,KVH,Dh] at `layer`.
+
+    The new token's k/v rows scatter straight into the stacked (donated)
+    buffers — no per-layer slice+update+write-back round trip, which is what
+    makes the scan-based decode path rewrite two full layer slices per layer
+    per token (§Perf gemma2-9b/decode_32k iteration 1).
+    """
+    softcap = cfg.attn_logit_softcap
+    q, k, v = _project_qkv(p, x, cfg, positions, mrope_pos)
+    b = x.shape[0]
+    rows = jnp.arange(b)
+    ck = ck.at[layer, rows, pos].set(k[:, 0])
+    cv = cv.at[layer, rows, pos].set(v[:, 0])
+    cache_l = KVCache(k=ck[layer], v=cv[layer])
+    o = decode_attention(q, cache_l, pos, window=window, softcap=softcap)
+    return _out_proj(p, o), ck, cv
+
+
+def self_attention(p, x, cfg: ModelConfig, *, mode: str,
+                   positions=None, mrope_pos=None, cache: KVCache = None,
+                   pos=None, window: int = 0, chunk: int = 1024,
+                   causal: bool = True):
+    """mode: 'train' | 'prefill' | 'decode'.
+
+    prefill returns (out, new_cache) where the cache holds the whole prompt;
+    decode consumes/updates a cache at per-row `pos`.
+    """
+    softcap = cfg.attn_logit_softcap
+    if mode in ("train", "prefill"):
+        q, k, v = _project_qkv(p, x, cfg, positions, mrope_pos)
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, chunk=chunk)
+        out = _out_proj(p, o)
+        if mode == "prefill":
+            return out, KVCache(k=k, v=v)
+        return out, None
+    assert mode == "decode" and cache is not None and pos is not None
+    q, k, v = _project_qkv(p, x, cfg, positions, mrope_pos)
+    cache = cache_update(cache, k, v, pos)
+    o = decode_attention(q, cache, pos, window=window, softcap=softcap)
+    return _out_proj(p, o), cache
+
+
+def cross_attention(p, x, enc_kv: KVCache, cfg: ModelConfig, enc_len=None):
+    """Decoder cross-attention over cached encoder K/V (no masking beyond len)."""
+    dt = x.dtype
+    q = jnp.einsum("...d,dhk->...hk", x, p["wq"].astype(dt))
+    b, sq, h, dh = q.shape
+    kvh = enc_kv.k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, enc_kv.k,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    if enc_len is not None:
+        kmask = jnp.arange(enc_kv.k.shape[1])[None, :] < enc_len[:, None]
+        s = jnp.where(kmask[:, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", pr.astype(enc_kv.v.dtype), enc_kv.v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, sq, h, dh).astype(dt)
+    return _out_proj(p, o)
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig) -> KVCache:
+    dt = enc_out.dtype
+    k = jnp.einsum("...d,dhk->...hk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("...d,dhk->...hk", enc_out, p["wv"].astype(dt))
+    return KVCache(k=k, v=v)

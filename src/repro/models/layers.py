@@ -1,0 +1,148 @@
+"""Shared model layers: norms, MLPs, embeddings, RoPE (incl. M-RoPE)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import shard
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float, *, gemma_style: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = scale.astype(jnp.float32)
+    scale = (1.0 + scale) if gemma_style else scale
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated: SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff)),        # gate
+        "wu": dense_init(k2, (d_model, d_ff)),        # up
+        "wo": dense_init(k3, (d_ff, d_model), in_axis=0),
+    }
+
+
+def mlp_apply(p, x, act: str):
+    # wi/wu are column-parallel over 'model'; wo row-parallel (psum inferred)
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["wu"].astype(x.dtype))
+    actf = jax.nn.gelu if act == "gelu" else jax.nn.silu
+    h = actf(h) * u
+    h = shard(h, *(("batch",) + (None,) * (h.ndim - 2) + ("model",)))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+
+
+def mlp_specs():
+    from repro.models.sharding import spec
+    return {"wi": ("fsdp", "model"), "wu": ("fsdp", "model"),
+            "wo": ("model", "fsdp")}
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    p = {"table": dense_init(key, (cfg.vocab_padded, cfg.d_model)) * jnp.sqrt(float(cfg.d_model))}
+    return p
+
+
+def embed_apply(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["table"].astype(_dtype(cfg)), tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(jnp.sqrt(float(cfg.d_model)), x.dtype)
+    return x
+
+
+def unembed_apply(p_embed, p_head, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = p_embed["table"].astype(x.dtype).T        # [D, V]
+    else:
+        w = p_head["w"].astype(x.dtype)
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def head_init(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": dense_init(key, (cfg.d_model, cfg.vocab_padded))}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, Dh], positions [..., S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, Dh/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Tuple[int, ...], theta: float):
+    """M-RoPE (qwen2-vl): positions3 [..., S, 3] = (t, h, w) coordinates.
+
+    The Dh/2 frequency slots are partitioned into `sections` (t, h, w); each
+    section rotates by its own coordinate stream.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # [Dh/2]
+    assert sum(sections) == dh // 2, (sections, dh)
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=dh // 2)
+    pos = jnp.take(positions3.astype(jnp.float32), sec_id, axis=-1)  # [..., S, Dh/2]
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,541 @@
+"""Model zoo wiring: init / train-forward / prefill / decode for all families.
+
+All stacks scan over layers (compile-time O(1) in depth — required for the
+single-core dry-run compiles); per-layer heterogeneity (gemma2 local/global
+alternation) is expressed as *dynamic* per-layer flag arrays fed to the scan,
+so one traced body serves every layer.
+
+Head padding: when num_heads doesn't divide the model axis (qwen2-vl: 28),
+q-heads are padded up to the next multiple of 16 (zero-init extra heads;
+their out-proj rows start at 0 so they are inert at init) — DESIGN.md
+§Arch-applicability.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, mamba2, moe, rwkv6
+from repro.models.attention import KVCache
+from repro.models.sharding import shard
+
+TP = 16  # model-axis width the head padding targets
+
+
+def heads_padded(cfg: ModelConfig) -> int:
+    h = cfg.num_heads
+    return h if h % TP == 0 or h < TP else -(-h // TP) * TP
+
+
+def _acfg(cfg: ModelConfig) -> ModelConfig:
+    """Config with padded head count (used for attention param shapes)."""
+    hp = heads_padded(cfg)
+    return cfg if hp == cfg.num_heads else cfg.replace(num_heads=hp)
+
+
+# ===========================================================================
+# per-family single-layer blocks
+# ===========================================================================
+
+def _dense_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.attn_init(ks[0], _acfg(cfg), heads=heads_padded(cfg)),
+        "ln_mlp": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": (moe.moe_init(ks[1], cfg) if cfg.family == "moe"
+                else layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff)),
+    }
+    if cfg.post_norm:
+        p["ln_attn_post"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["ln_mlp_post"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _dense_block_apply(p, x, cfg: ModelConfig, *, mode, window, positions,
+                       mrope_pos=None, cache=None, pos=None):
+    """window: dynamic per-layer scalar (0 = global attention)."""
+    acfg = _acfg(cfg)
+    norm = lambda t, w: layers.rms_norm(t, w, cfg.norm_eps, gemma_style=True)
+    h = norm(x, p["ln_attn"])
+    a_out, new_cache = attn.self_attention(
+        p["attn"], h, acfg, mode=mode, positions=positions,
+        mrope_pos=mrope_pos, cache=cache, pos=pos, window=window)
+    if cfg.post_norm:
+        a_out = norm(a_out, p["ln_attn_post"])
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        m_out = layers.mlp_apply(p["mlp"], h, cfg.act)
+        x = x + a_out + m_out
+    else:
+        x = x + a_out
+        h2 = norm(x, p["ln_mlp"])
+        if cfg.family == "moe":
+            m_out, aux = moe.moe_apply(p["mlp"], h2, cfg)
+        else:
+            m_out = layers.mlp_apply(p["mlp"], h2, cfg.act)
+        if cfg.post_norm:
+            m_out = norm(m_out, p["ln_mlp_post"])
+        x = x + m_out
+    x = shard(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+def _dense_block_decode(p, x, cfg: ModelConfig, ck, cv, layer: int, *,
+                        window, positions, mrope_pos=None, pos=None):
+    """Decode-mode block against stacked caches (see _run_stack)."""
+    acfg = _acfg(cfg)
+    norm = lambda t, w: layers.rms_norm(t, w, cfg.norm_eps, gemma_style=True)
+    h = norm(x, p["ln_attn"])
+    a_out, ck, cv = attn.decode_attention_stacked(
+        p["attn"], h, acfg, ck, cv, layer, positions=positions,
+        mrope_pos=mrope_pos, pos=pos, window=window)
+    if cfg.post_norm:
+        a_out = norm(a_out, p["ln_attn_post"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        m_out = layers.mlp_apply(p["mlp"], h, cfg.act)
+        x = x + a_out + m_out
+    else:
+        x = x + a_out
+        h2 = norm(x, p["ln_mlp"])
+        if cfg.family == "moe":
+            m_out, aux = moe.moe_apply(p["mlp"], h2, cfg)
+        else:
+            m_out = layers.mlp_apply(p["mlp"], h2, cfg.act)
+        if cfg.post_norm:
+            m_out = norm(m_out, p["ln_mlp_post"])
+        x = x + m_out
+    x = shard(x, "batch", None, None)
+    return x, ck, cv, aux
+
+
+def _layer_windows(cfg: ModelConfig, n: int) -> jax.Array:
+    """Per-layer sliding windows (gemma2: even layers local)."""
+    if cfg.alt_local_global and cfg.sliding_window:
+        is_local = (jnp.arange(n) % 2 == 0)
+        return jnp.where(is_local, cfg.sliding_window, 0).astype(jnp.int32)
+    return jnp.full((n,), cfg.sliding_window, jnp.int32)
+
+
+# --- rwkv block -----------------------------------------------------------
+
+def _rwkv_block_init(key, cfg: ModelConfig):
+    p = rwkv6.rwkv_init(key, cfg)
+    p["ln1"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _rwkv_block_apply(p, x, cfg: ModelConfig, cache: rwkv6.RWKVCache):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, state_new, x_att = rwkv6.time_mix(p, h, cfg, cache.state, cache.x_att)
+    x = x + y
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y2, x_ffn = rwkv6.channel_mix(p, h2, cfg, cache.x_ffn)
+    x = x + y2
+    x = shard(x, "batch", None, None)
+    return x, rwkv6.RWKVCache(state=state_new, x_att=x_att, x_ffn=x_ffn)
+
+
+# --- zamba2 (hybrid) ------------------------------------------------------
+
+def _mamba_block_init(key, cfg: ModelConfig):
+    p = mamba2.mamba_init(key, cfg)
+    p["ln"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _mamba_block_apply(p, x, cfg: ModelConfig, *, mode, cache=None):
+    h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, new_cache = mamba2.mamba_apply(p, h, cfg, mode=mode, cache=cache,
+                                      chunk=128)
+    return x + y, new_cache
+
+
+class ZambaCaches(NamedTuple):
+    mamba: Any            # stacked [L, ...] MambaCache
+    attn: Any             # stacked [L/P, ...] KVCache (per shared-block call)
+
+
+# ===========================================================================
+# whole-model params
+# ===========================================================================
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(ks[0], cfg),
+        "head": layers.head_init(ks[1], cfg),
+        # all dense-path norms are zeros-init and applied as (1 + scale)
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        keys = jax.random.split(ks[2], cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _dense_block_init(k, cfg))(keys)
+    elif fam == "ssm":
+        keys = jax.random.split(ks[2], cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _rwkv_block_init(k, cfg))(keys)
+    elif fam == "hybrid":
+        keys = jax.random.split(ks[2], cfg.num_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _mamba_block_init(k, cfg))(keys)
+        params["shared_attn"] = _dense_block_init(ks[3], cfg)
+    elif fam == "encdec":
+        ek = jax.random.split(ks[2], cfg.num_enc_layers)
+        dk = jax.random.split(ks[3], cfg.num_dec_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _dense_block_init(k, cfg))(ek)
+
+        def _dec_init(k):
+            k1, k2 = jax.random.split(k)
+            p = _dense_block_init(k1, cfg)
+            p["ln_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            p["cross"] = attn.attn_init(k2, _acfg(cfg), heads=heads_padded(cfg))
+            return p
+
+        params["dec_blocks"] = jax.vmap(_dec_init)(dk)
+        params["enc_final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ===========================================================================
+# decoder-only stacks (dense / moe / vlm / ssm / hybrid)
+# ===========================================================================
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    x = layers.embed_apply(params["embed"], batch["tokens"], cfg)
+    if cfg.family == "vlm" and "vis_embeds" in batch:
+        v = batch["vis_embeds"].astype(x.dtype)
+        nv = v.shape[1]
+        pos_is_vis = (jnp.arange(x.shape[1]) < nv)[None, :, None]
+        vpad = jnp.pad(v, ((0, 0), (0, x.shape[1] - nv), (0, 0)))
+        x = jnp.where(pos_is_vis, vpad, x)
+    return shard(x, "batch", None, None)
+
+
+# see the §Perf note inside _run_stack: scan decode measures better on the
+# CPU-backend estimator; the unrolled path is the real-TPU candidate.
+DECODE_UNROLLED = False
+
+
+def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None,
+               mrope_pos=None):
+    """Scan over layers for every decoder-only family.
+
+    caches: stacked per-layer cache pytree (or None for train).
+    Returns (x, new_caches, aux_sum).
+    """
+    fam = cfg.family
+    n = cfg.num_layers
+    b, s = x.shape[0], x.shape[1]
+    positions = (jnp.arange(s)[None, :] + jnp.zeros((b, 1), jnp.int32)
+                 if mode in ("train", "prefill") else pos[:, None])
+    if mrope_pos is None and fam == "vlm":
+        mrope_pos = jnp.broadcast_to(
+            positions[..., None], positions.shape + (3,))
+
+    if fam in ("dense", "moe", "vlm"):
+        windows = _layer_windows(cfg, n)
+
+        if mode == "decode" and DECODE_UNROLLED:
+            # Unrolled decode: token-row scatters straight into the stacked
+            # (donated) caches — no whole-layer slice/update/write-back per
+            # layer.  §Perf gemma2-9b/decode_32k iteration 1: REFUTED on the
+            # CPU-backend estimator (XLA:CPU float-normalization converts the
+            # whole stacked bf16 cache around every full-buffer scatter:
+            # 0.141 s -> 1.78 s).  On real TPU hardware bf16 is native and
+            # in-place scatter on a donated buffer touches only the token
+            # rows, so this path remains the hardware candidate — kept
+            # switchable, default off; the scan path is the measured default.
+            ck, cv = caches.k, caches.v
+            aux = jnp.zeros((), jnp.float32)
+            for l in range(n):
+                p_l = jax.tree.map(lambda t: t[l], params["blocks"])
+                x, ck, cv, a = _dense_block_decode(
+                    p_l, x, cfg, ck, cv, l, window=windows[l],
+                    positions=positions, mrope_pos=mrope_pos, pos=pos)
+                aux = aux + a
+            return x, attn.KVCache(k=ck, v=cv), aux
+
+        def body(carry, per_layer):
+            xc, aux = carry
+            p_l, cache_l, win = per_layer
+            xc, new_cache, a = _dense_block_apply(
+                p_l, xc, cfg, mode=mode, window=win, positions=positions,
+                mrope_pos=mrope_pos, cache=cache_l, pos=pos)
+            return (xc, aux + a), new_cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], caches, windows))
+        return x, new_caches, aux
+
+    if fam == "ssm":
+        if caches is None:
+            caches = init_caches(cfg, b, 0, x.dtype)
+
+        def body(xc, per_layer):
+            p_l, cache_l = per_layer
+            xc, new_cache = _rwkv_block_apply(p_l, xc, cfg, cache_l)
+            return xc, new_cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    if fam == "hybrid":
+        period = cfg.shared_block_period
+        if caches is None:
+            caches = init_caches(cfg, b, s, x.dtype)
+        m_caches, a_caches = caches.mamba, caches.attn
+        nper = n // period
+        # reshape stacked pytrees into [nper, period, ...]
+        re = lambda t: t.reshape((nper, period) + t.shape[1:])
+        blocks_p = jax.tree.map(re, params["blocks"])
+        m_caches_p = (jax.tree.map(re, m_caches) if m_caches is not None
+                      else None)
+        shared_p = params["shared_attn"]
+
+        def body(xc, per):
+            p_grp, mc_grp, ac_l = per
+
+            def inner(xc2, per2):
+                p_l, mc_l = per2
+                xc2, mc_new = _mamba_block_apply(p_l, xc2, cfg, mode=mode,
+                                                 cache=mc_l)
+                return xc2, mc_new
+
+            xc, mc_new = jax.lax.scan(inner, xc, (p_grp, mc_grp))
+            xc, ac_new, _ = _dense_block_apply(
+                shared_p, xc, cfg, mode=mode, window=jnp.zeros((), jnp.int32),
+                positions=positions, cache=ac_l, pos=pos)
+            return xc, (mc_new, ac_new)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, (m_new, a_new) = jax.lax.scan(body, x, (blocks_p, m_caches_p,
+                                                   a_caches))
+        m_new = jax.tree.map(
+            lambda t: t.reshape((n,) + t.shape[2:]), m_new)
+        return x, ZambaCaches(mamba=m_new, attn=a_new), jnp.zeros((), jnp.float32)
+
+    raise ValueError(fam)
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    """Stacked per-layer caches for decode (s_max = KV capacity)."""
+    fam = cfg.family
+    hp = heads_padded(cfg)
+    if fam in ("dense", "moe", "vlm"):
+        def one(_):
+            return KVCache.init(batch, s_max, cfg.num_kv_heads, cfg.head_dim,
+                                jnp.dtype(cfg.dtype))
+        return jax.vmap(one)(jnp.arange(cfg.num_layers))
+    if fam == "ssm":
+        def one(_):
+            return rwkv6.RWKVCache.init(batch, cfg, jnp.dtype(cfg.dtype))
+        return jax.vmap(one)(jnp.arange(cfg.num_layers))
+    if fam == "hybrid":
+        def onem(_):
+            return mamba2.MambaCache.init(batch, cfg, jnp.dtype(cfg.dtype))
+        def onea(_):
+            return KVCache.init(batch, s_max, cfg.num_kv_heads, cfg.head_dim,
+                                jnp.dtype(cfg.dtype))
+        nper = cfg.num_layers // cfg.shared_block_period
+        return ZambaCaches(
+            mamba=jax.vmap(onem)(jnp.arange(cfg.num_layers)),
+            attn=jax.vmap(onea)(jnp.arange(nper)))
+    if fam == "encdec":
+        def onek(_):
+            return KVCache.init(batch, s_max, cfg.num_kv_heads, cfg.head_dim,
+                                jnp.dtype(cfg.dtype))
+        return {"self": jax.vmap(onek)(jnp.arange(cfg.num_dec_layers)),
+                "cross": None}   # cross caches created at prefill
+    raise ValueError(fam)
+
+
+# ===========================================================================
+# encoder-decoder (seamless)
+# ===========================================================================
+
+def _encode(params, cfg: ModelConfig, src_emb):
+    x = shard(src_emb.astype(jnp.dtype(cfg.dtype)), "batch", None, None)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)[None, :] + jnp.zeros((b, 1), jnp.int32)
+
+    def body(xc, p_l):
+        h = layers.rms_norm(xc, p_l["ln_attn"], cfg.norm_eps,
+                            gemma_style=True)
+        a, _ = attn.self_attention(p_l["attn"], h, _acfg(cfg), mode="train",
+                                   positions=positions, causal=False)
+        xc = xc + a
+        h2 = layers.rms_norm(xc, p_l["ln_mlp"], cfg.norm_eps,
+                             gemma_style=True)
+        xc = xc + layers.mlp_apply(p_l["mlp"], h2, cfg.act)
+        return xc, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.rms_norm(x, params["enc_final_norm"], cfg.norm_eps,
+                           gemma_style=True)
+
+
+def _decode_stack(params, cfg: ModelConfig, x, enc_out, *, mode,
+                  self_caches=None, cross_caches=None, pos=None):
+    b, s = x.shape[0], x.shape[1]
+    positions = (jnp.arange(s)[None, :] + jnp.zeros((b, 1), jnp.int32)
+                 if mode in ("train", "prefill") else pos[:, None])
+
+    def body(xc, per):
+        p_l, sc_l, cc_l = per
+        h = layers.rms_norm(xc, p_l["ln_attn"], cfg.norm_eps,
+                            gemma_style=True)
+        a, sc_new = attn.self_attention(
+            p_l["attn"], h, _acfg(cfg), mode=mode, positions=positions,
+            cache=sc_l, pos=pos)
+        xc = xc + a
+        hc = layers.rms_norm(xc, p_l["ln_cross"], cfg.norm_eps,
+                             gemma_style=True)
+        if cc_l is None:
+            kv = attn.cross_kv(p_l["cross"], enc_out, _acfg(cfg))
+        else:
+            kv = cc_l
+        xc = xc + attn.cross_attention(p_l["cross"], hc, kv, _acfg(cfg))
+        h2 = layers.rms_norm(xc, p_l["ln_mlp"], cfg.norm_eps,
+                             gemma_style=True)
+        xc = xc + layers.mlp_apply(p_l["mlp"], h2, cfg.act)
+        return xc, (sc_new, kv)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (sc_new, cc_new) = jax.lax.scan(
+        body, x, (params["dec_blocks"], self_caches, cross_caches))
+    return x, sc_new, cc_new
+
+
+# ===========================================================================
+# public API
+# ===========================================================================
+
+def forward_train(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """-> (logits [B,S,Vp], aux_loss)."""
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["src_emb"])
+        x = _embed_inputs(params, cfg, batch)
+        x, _, _ = _decode_stack(params, cfg, x, enc_out, mode="train",
+                                self_caches=None, cross_caches=None)
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                            gemma_style=True)
+        logits = layers.unembed_apply(params["embed"], params["head"], x, cfg)
+        return shard(logits, "batch", None, "model"), jnp.zeros((), jnp.float32)
+    x = _embed_inputs(params, cfg, batch)
+    x, _, aux = _run_stack(params, x, cfg, mode="train", caches=_train_caches(cfg, x),
+                           mrope_pos=batch.get("mrope_pos"))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                        gemma_style=True)
+    logits = layers.unembed_apply(params["embed"], params["head"], x, cfg)
+    return shard(logits, "batch", None, "model"), aux
+
+
+def _train_caches(cfg: ModelConfig, x):
+    """Train mode: attention families need no cache; ssm/hybrid carry states."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return None
+    if cfg.family == "ssm":
+        return init_caches(cfg, x.shape[0], 0, x.dtype)
+    if cfg.family == "hybrid":
+        return init_caches(cfg, x.shape[0], 0, x.dtype)._replace(attn=None)
+    return None
+
+
+def prefill(params, cfg: ModelConfig, batch, s_max: int):
+    """Run the prompt; returns (last_logits [B,Vp], caches, last_pos [B])."""
+    fam = cfg.family
+    if fam == "encdec":
+        enc_out = _encode(params, cfg, batch["src_emb"])
+        x = _embed_inputs(params, cfg, batch)
+        x, sc, cc = _decode_stack(params, cfg, x, enc_out, mode="prefill",
+                                  self_caches=None, cross_caches=None)
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                            gemma_style=True)
+        logits = layers.unembed_apply(params["embed"], params["head"],
+                                      x[:, -1:], cfg)
+        sc = _grow_caches(sc, s_max)
+        caches = {"self": sc, "cross": cc}
+        last_pos = jnp.full((x.shape[0],), x.shape[1] - 1, jnp.int32)
+        return logits[:, 0], caches, last_pos
+
+    x = _embed_inputs(params, cfg, batch)
+    x, caches, _ = _run_stack(params, x, cfg, mode="prefill",
+                              caches=_train_caches(cfg, x),
+                              mrope_pos=batch.get("mrope_pos"))
+    if fam in ("dense", "moe", "vlm"):
+        caches = _grow_caches(caches, s_max)
+    elif fam == "hybrid":
+        caches = caches._replace(attn=_grow_caches(caches.attn, s_max))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                        gemma_style=True)
+    logits = layers.unembed_apply(params["embed"], params["head"],
+                                  x[:, -1:], cfg)
+    last_pos = jnp.full((x.shape[0],), batch["tokens"].shape[1] - 1, jnp.int32)
+    return logits[:, 0], caches, last_pos
+
+
+def _grow_caches(kv_stacked, s_max: int):
+    """Pad prefill KV caches [L,B,S,..] up to decode capacity s_max."""
+    if kv_stacked is None:
+        return None
+
+    def grow(t):
+        s = t.shape[2]
+        if s >= s_max:
+            return t
+        pad = [(0, 0)] * t.ndim
+        pad[2] = (0, s_max - s)
+        return jnp.pad(t, pad)
+
+    return jax.tree.map(grow, kv_stacked)
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos):
+    """One token: token i32[B,1]; pos i32[B] (index being written).
+
+    Returns (logits [B,Vp], new_caches).
+    """
+    fam = cfg.family
+    batch = {"tokens": token}
+    x = _embed_inputs(params, cfg, batch)
+    if fam == "encdec":
+        x, sc, cc = _decode_stack(params, cfg, x, None, mode="decode",
+                                  self_caches=caches["self"],
+                                  cross_caches=caches["cross"], pos=pos)
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                            gemma_style=True)
+        logits = layers.unembed_apply(params["embed"], params["head"], x, cfg)
+        return logits[:, 0], {"self": sc, "cross": cc}
+    x, new_caches, _ = _run_stack(params, x, cfg, mode="decode",
+                                  caches=caches, pos=pos)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                        gemma_style=True)
+    logits = layers.unembed_apply(params["embed"], params["head"], x, cfg)
+    return logits[:, 0], new_caches

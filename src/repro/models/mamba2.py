@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) block — used by zamba2's backbone.
+
+Chunked state-space-duality form: the sequence is cut into chunks of Q
+tokens; within a chunk the recurrence is evaluated as dense (masked) matrix
+products (MXU-friendly), and only the tiny per-chunk state recurrence runs
+as a lax.scan.  This keeps almost all FLOPs in vectorized einsums — which
+also makes XLA cost_analysis (roofline §) count them correctly, unlike a
+per-token scan whose body is counted once.
+
+Decode is the O(1) recurrent update on state [B, H, P, N].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.sharding import shard
+
+
+class MambaCache(NamedTuple):
+    state: jax.Array       # [B, H, P, N] fp32
+    conv: jax.Array        # [B, W-1, D_inner + 2N] rolling conv window
+
+    @staticmethod
+    def init(batch: int, cfg: ModelConfig, dtype) -> "MambaCache":
+        h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        d_conv = cfg.ssm_d_inner + 2 * cfg.ssm_state
+        return MambaCache(
+            state=jnp.zeros((batch, h, p, n), jnp.float32),
+            conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, d_conv), dtype),
+        )
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    # separate projections (instead of one fused in_proj) so each output dim
+    # shards cleanly over 'model' without slicing across shard boundaries
+    return {
+        "w_x": layers.dense_init(ks[0], (d, di)),
+        "w_bc": layers.dense_init(ks[1], (d, 2 * n)),
+        "w_z": layers.dense_init(ks[2], (d, di)),
+        "w_dt": layers.dense_init(ks[3], (d, h)),
+        "conv_x": layers.dense_init(ks[4], (cfg.ssm_conv_width, di)) * 0.1,
+        "conv_bc": layers.dense_init(ks[5], (cfg.ssm_conv_width, 2 * n)) * 0.1,
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[0], (di, d)),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    dt_ = x.dtype
+    xs = jnp.einsum("...d,de->...e", x, p["w_x"].astype(dt_))
+    bc = jnp.einsum("...d,de->...e", x, p["w_bc"].astype(dt_))
+    z = jnp.einsum("...d,de->...e", x, p["w_z"].astype(dt_))
+    dt = jnp.einsum("...d,de->...e", x, p["w_dt"].astype(dt_))
+    return xs, bc, z, dt
+
+
+def _causal_conv(xbc, conv_w, carry=None):
+    """Depthwise causal conv1d width W; carry [B, W-1, C] for decode."""
+    w = conv_w.shape[0]
+    if carry is not None:
+        xin = jnp.concatenate([carry.astype(xbc.dtype), xbc], axis=1)
+    else:
+        xin = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(xin[:, i: i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(w))
+    return jax.nn.silu(out), xin[:, -(w - 1):, :]
+
+
+def _ssd_chunked(xh, dt, a_log, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    xh [B,S,H,P], dt [B,S,H] (softplus'd), b,c [B,S,N] -> y [B,S,H,P], final
+    state [B,H,P,N].
+    """
+    bsz, s, h, p = xh.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+
+    A = -jnp.exp(a_log)                                # [H]
+    da = dt * A[None, None, :]                         # [B,S,H] (<=0)
+    xdt = xh * dt[..., None]                           # dt-weighted input
+
+    def r(t):  # [B,S,...] -> [B,nc,chunk,...]
+        return t.reshape((bsz, nc, chunk) + t.shape[2:])
+
+    da_c, xdt_c, b_c, c_c = r(da), r(xdt), r(b), r(c)
+    cum = jnp.cumsum(da_c, axis=2)                     # [B,nc,Q,H]
+    total = cum[:, :, -1]                              # [B,nc,H]
+
+    # ---- intra-chunk (dense, causal-masked) ----
+    # L[q,t] = exp(cum_q - cum_t) for q >= t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcqn,bctn->bcqt", c_c, b_c,
+                    preferred_element_type=jnp.float32)      # [B,nc,Q,Q]
+    y_intra = jnp.einsum("bcqt,bcqth,bcthp->bcqhp",
+                         cb, L.astype(jnp.float32),
+                         xdt_c.astype(jnp.float32))
+
+    # ---- chunk summary states ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)        # [B,nc,Q,H]
+    s_chunk = jnp.einsum("bctn,bcth,bcthp->bchpn",
+                         b_c.astype(jnp.float32), decay_to_end,
+                         xdt_c.astype(jnp.float32))           # [B,nc,H,P,N]
+
+    # ---- inter-chunk recurrence (tiny scan over nc) ----
+    def step(s_prev, inp):
+        s_c, tot = inp                                        # [B,H,P,N], [B,H]
+        s_new = s_prev * jnp.exp(tot)[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                # [B,nc,H,P,N]
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(cum)                           # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         c_c.astype(jnp.float32), s_prevs, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, s_final
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, mode: str,
+                cache: Optional[MambaCache] = None, chunk: int = 256):
+    """x [B,S,D] -> (y [B,S,D], cache').  mode train/prefill share a path."""
+    dt_ = x.dtype
+    di, n, h, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xs, bc, z, dt = _split_proj(p, x, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+
+    if mode in ("train", "prefill"):
+        xs, carry_x = _causal_conv(xs, p["conv_x"].astype(dt_))
+        bc, carry_bc = _causal_conv(bc, p["conv_bc"].astype(dt_))
+        conv_carry = jnp.concatenate([carry_x, carry_bc], axis=-1)
+        b, c = jnp.split(bc, [n], axis=-1)
+        xh = xs.reshape(*xs.shape[:-1], h, hd)
+        xh = shard(xh, "batch", None, "model", None)
+        eff_chunk = min(chunk, xh.shape[1])
+        y, s_final = _ssd_chunked(xh, dt, p["A_log"], b, c, eff_chunk)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(*x.shape[:-1], di).astype(dt_)
+        y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_),
+                            p["norm"], cfg.norm_eps)
+        out = jnp.einsum("...e,ed->...d", y, p["out_proj"].astype(dt_))
+        new_cache = None
+        if mode == "prefill":
+            new_cache = MambaCache(state=s_final, conv=conv_carry)
+        return out, new_cache
+
+    # ---- decode: O(1) recurrent update ----
+    assert cache is not None
+    carry_x_in = cache.conv[..., :di]
+    carry_bc_in = cache.conv[..., di:]
+    xs, carry_x = _causal_conv(xs, p["conv_x"].astype(dt_), carry_x_in)
+    bc, carry_bc = _causal_conv(bc, p["conv_bc"].astype(dt_), carry_bc_in)
+    conv_carry = jnp.concatenate([carry_x, carry_bc], axis=-1)
+    b, c = jnp.split(bc, [n], axis=-1)
+    xh = xs.reshape(*xs.shape[:-1], h, hd)                    # [B,1,H,P]
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[:, 0] * A[None, :])                       # [B,H]
+    xdt = (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)  # [B,H,P]
+    s_new = (cache.state * da[:, :, None, None]
+             + jnp.einsum("bhp,bn->bhpn", xdt, b[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), s_new)
+    y = y + p["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, di).astype(dt_)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_),
+                        p["norm"], cfg.norm_eps)
+    out = jnp.einsum("...e,ed->...d", y, p["out_proj"].astype(dt_))
+    return out, MambaCache(state=s_new, conv=conv_carry)

@@ -1,0 +1,198 @@
+"""Parameter PartitionSpecs: path-based rules + divisibility sanitization.
+
+Logical plan (DESIGN.md §5): TP over 'model' on heads / ffn-hidden / vocab /
+experts; FSDP (ZeRO-3) over 'data' on the other big dim.  Any mapping whose
+dim doesn't divide the axis product is dropped to replicated (e.g. kv_heads=8
+over model=16), which is exactly the policy the runtime sharding helper uses
+for activations.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+# (path regex, logical axes for the TRAILING dims of the param)
+_RULES = [
+    (r"embed/table$", ("model", "fsdp")),
+    (r"head/w$", ("fsdp", "model")),
+    # attention
+    (r"(attn|cross)/wq$", ("fsdp", "model", None)),
+    (r"(attn|cross)/wk$", ("fsdp", "model", None)),
+    (r"(attn|cross)/wv$", ("fsdp", "model", None)),
+    (r"(attn|cross)/wo$", ("model", None, "fsdp")),
+    # moe (rank-3 expert weights) before dense mlp rules
+    (r"mlp/wi$|mlp/wu$", (("expert", "fsdp", "model_ff"), ("fsdp", "model"))),
+    (r"mlp/wo$", (("expert", "model_ff", "fsdp"), ("model", "fsdp"))),
+    (r"mlp/router$", ("fsdp", None)),
+    (r"mlp/shared/w[iu]$", ("fsdp", "model")),
+    (r"mlp/shared/wo$", ("model", "fsdp")),
+    # rwkv: time-mix projections column-parallel (heads land model-sharded,
+    # matching the head-local WKV + GroupNorm), wo ROW-parallel (contracts
+    # the model-sharded head axis -> one all-reduce per block)
+    (r"/(wr|wk|wv|wg|ww|cwr)$", ("fsdp", "model")),
+    (r"/wo$", ("model", "fsdp")),
+    (r"/cwk$", ("fsdp", "model")),
+    (r"/cwv$", ("model", "fsdp")),
+    # mamba
+    (r"/(w_x|w_z|w_dt)$", ("fsdp", "model")),
+    (r"/w_bc$", ("fsdp", None)),
+    (r"/out_proj$", ("model", "fsdp")),
+]
+
+_LOGICAL = {
+    "model": ("model",),
+    "model_ff": ("model",),
+    "expert": ("model",),
+    "fsdp": ("data",),
+    None: (),
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _match(path: str, ndim: int):
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            if isinstance(spec[0], tuple):          # rank-dependent variants
+                for variant in spec:
+                    if len(variant) <= ndim:
+                        return variant
+                return spec[-1]
+            return spec
+    return None
+
+
+def _sanitize(logical: Tuple, shape, mesh: Mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ndim = len(shape)
+    # pad leading dims (stacked layer axis etc.) with None
+    full = (None,) * (ndim - len(logical)) + tuple(logical)
+    out = []
+    used = set()
+    for dim, l in zip(shape, full):
+        axes = _LOGICAL.get(l, ())
+        axes = tuple(a for a in axes if a in sizes and a not in used)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if axes and n > 1 and dim % n == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    """Pytree of PartitionSpecs matching lm.init_params(cfg)."""
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        logical = _match(ps, leaf.ndim)
+        if logical is None:
+            return P()           # norms / scalars / small vectors: replicated
+        return _sanitize(logical, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, shapes)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh))
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, caches_shape):
+    """KV/state cache specs with divisibility-guarded placement.
+
+    Policy (DESIGN.md §5): batch over the data axes (DP); kv-heads / SSM
+    heads / hidden over 'model' (TP).  When the batch is too small to shard
+    (long_500k: B=1), the cache SEQUENCE axis takes the data axes instead —
+    sequence-parallel KV, XLA then lowers decode attention to flash-decoding
+    style partial reductions.  Any mapping that does not divide is dropped.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    dp = 1
+    for a in batch_axes:
+        dp *= sizes[a]
+
+    def div(n: int, k: int) -> bool:
+        return k > 0 and n % k == 0
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = leaf.ndim
+        last = ps.split("/")[-1]
+        spec = [None] * nd
+        if last in ("k", "v") and nd in (4, 5):
+            off = nd - 4               # stacked layer axis present?
+            b, s, kvh = shape[off], shape[off + 1], shape[off + 2]
+            model_used = False
+            if div(kvh, m):
+                spec[off + 2] = "model"
+                model_used = True
+            if div(b, dp):
+                spec[off] = batch_axes
+                if not model_used and div(s, m):
+                    spec[off + 1] = "model"       # 'seq_kv' policy
+            else:
+                # small-batch long-context: sequence-shard over data axes
+                seq_axes = list(batch_axes)
+                if not model_used:
+                    seq_axes.append("model")
+                n = 1
+                for a in seq_axes:
+                    n *= sizes[a]
+                if div(s, n):
+                    spec[off + 1] = tuple(seq_axes)
+                elif div(s, dp):
+                    spec[off + 1] = batch_axes
+            return P(*spec)
+        if last == "state" and nd >= 4:
+            off = nd - 4               # [L?, B, H, ...]
+            if div(shape[off], dp):
+                spec[off] = batch_axes
+            if div(shape[off + 1], m):
+                spec[off + 1] = "model"
+            return P(*spec)
+        if last in ("x_att", "x_ffn") and nd >= 2:
+            if div(shape[nd - 2], dp):
+                spec[nd - 2] = batch_axes
+            if div(shape[nd - 1], m):
+                spec[nd - 1] = "model"
+            return P(*spec)
+        if last == "conv" and nd >= 3:
+            if div(shape[nd - 3], dp):
+                spec[nd - 3] = batch_axes
+            if div(shape[nd - 1], m):
+                spec[nd - 1] = "model"
+            return P(*spec)
+        # fallback: shard the first dim that divides the data axes
+        for i, d in enumerate(shape):
+            if i > 0 and div(d, dp):   # dim 0 is usually the stacked layers
+                spec[i] = batch_axes
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, caches_shape)

@@ -1,0 +1,96 @@
+"""RAG serving — the paper's *query template* end to end.
+
+The paper's template assigns LLM prefill/decode to the NPU and vector search
+to the CPU, overlapping them.  Here both live on the mesh inside ONE jitted
+program: the retrieval GEMM (fused scan over the engine state) runs fused
+with the embedding/prefill computation, so there is no host round-trip
+between "memory" and "model" — the TPU expression of AME's unified-memory
+zero-copy coupling.
+
+`retrieve_and_prefill`: embed the query tokens (mean-pooled model embeddings
+as the stub embedder), query the agentic memory, splice the top-k memory
+rows into the prompt as prefix soft-embeddings, then prefill.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import EngineConfig, ModelConfig
+from repro.core import index as ivf
+from repro.models import layers, lm
+from repro.models.sharding import shard
+
+
+def embed_query(params, cfg: ModelConfig, tokens) -> jax.Array:
+    """Stub embedder: mean-pooled token embeddings, L2-normalized [B, D]."""
+    x = layers.embed_apply(params["embed"], tokens, cfg).astype(jnp.float32)
+    q = jnp.mean(x, axis=1)
+    return q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-6)
+
+
+def retrieve(state: ivf.IVFState, q, ecfg: EngineConfig, k: int):
+    """Memory lookup (full-scan template; one fused GEMM + top_k).
+    Returns (ids [B,k], scores [B,k], rows [B,k,D])."""
+    return ivf.query_full_scan_rows(state, q, ecfg, k)
+
+
+def make_rag_prefill(cfg: ModelConfig, ecfg: EngineConfig, s_max: int,
+                     k: int = 4):
+    """jit-able (params, engine_state, batch) -> (token, caches, pos).
+
+    The retrieved memory vectors (dim = engine dim, projected to d_model if
+    needed) are prepended as soft prompt embeddings — the fused
+    retrieval->generation path the paper's hybrid template schedules.
+    """
+    assert ecfg.dim == cfg.d_model or True
+
+    def step(params, mem_state: ivf.IVFState, batch):
+        tokens = batch["tokens"]
+        q = embed_query(params, cfg, tokens)
+        if ecfg.dim != cfg.d_model:
+            # project query into memory space with a fixed random map
+            key = jax.random.PRNGKey(0)
+            proj = jax.random.normal(key, (cfg.d_model, ecfg.dim),
+                                     jnp.float32) / jnp.sqrt(cfg.d_model)
+            q = q @ proj
+        ids, scores, rows = retrieve(mem_state, q, ecfg, k)
+        # retrieved memories enter the prompt as soft-prefix embeddings,
+        # softmax-weighted by retrieval score
+        w = jax.nn.softmax(scores, axis=-1).astype(jnp.float32)
+        mem_vec = jnp.einsum("bk,bkd->bd", w, rows.astype(jnp.float32))
+        if ecfg.dim != cfg.d_model:
+            key = jax.random.PRNGKey(1)
+            unproj = jax.random.normal(key, (ecfg.dim, cfg.d_model),
+                                       jnp.float32) / jnp.sqrt(ecfg.dim)
+            mem_vec = mem_vec @ unproj
+        x_mem = mem_vec[:, None, :].astype(jnp.dtype(cfg.dtype))
+        emb = layers.embed_apply(params["embed"], tokens, cfg)
+        emb = jnp.concatenate([x_mem, emb[:, :-1]], axis=1)
+        out, caches, pos = _prefill_with_embeddings(params, cfg, emb, batch,
+                                                    s_max)
+        return out, caches, pos, ids
+
+    return step
+
+
+def _prefill_with_embeddings(params, cfg: ModelConfig, x, batch, s_max: int):
+    """Prefill given already-computed input embeddings."""
+    x = shard(x, "batch", None, None)
+    caches = lm._train_caches(cfg, x)
+    x, caches, _ = lm._run_stack(params, x, cfg, mode="prefill",
+                                 caches=caches,
+                                 mrope_pos=batch.get("mrope_pos"))
+    if cfg.family in ("dense", "moe", "vlm"):
+        caches = lm._grow_caches(caches, s_max)
+    elif cfg.family == "hybrid":
+        caches = caches._replace(attn=lm._grow_caches(caches.attn, s_max))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps,
+                        gemma_style=True)
+    logits = layers.unembed_apply(params["embed"], params["head"],
+                                  x[:, -1:], cfg)
+    pos = jnp.full((x.shape[0],), x.shape[1] - 1, jnp.int32)
+    return logits[:, 0], caches, pos

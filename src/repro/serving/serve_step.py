@@ -1,0 +1,51 @@
+"""Serving steps: jitted prefill / decode with donated KV caches.
+
+`serve_step` is the unit the decode_* dry-run shapes lower: ONE new token
+against a KV cache of the configured length.  Cache buffers are donated so
+decode updates are in-place (the zero-copy discipline from the paper's
+shared-buffer design).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models.sharding import shard
+
+
+def greedy(logits: jax.Array, vocab_size: int) -> jax.Array:
+    mask = jnp.arange(logits.shape[-1]) < vocab_size
+    return jnp.argmax(jnp.where(mask, logits, -jnp.inf), -1).astype(jnp.int32)
+
+
+def make_prefill(cfg: ModelConfig, s_max: int):
+    def prefill_step(params, batch):
+        logits, caches, pos = lm.prefill(params, cfg, batch, s_max)
+        return greedy(logits, cfg.vocab_size)[:, None], caches, pos
+    return jax.jit(prefill_step)
+
+
+def make_decode(cfg: ModelConfig):
+    """(params, token [B,1], caches, pos [B]) -> (next_token, caches)."""
+    def decode(params, token, caches, pos):
+        logits, caches = lm.decode_step(params, cfg, token, caches, pos)
+        return greedy(logits, cfg.vocab_size)[:, None], caches
+    return jax.jit(decode, donate_argnums=(2,))
+
+
+def generate(params, cfg: ModelConfig, batch, steps: int, s_max: int):
+    """Simple generation loop for examples/tests (prefill + N decode steps)."""
+    prefill = make_prefill(cfg, s_max)
+    decode = make_decode(cfg)
+    tok, caches, pos = prefill(params, batch)
+    out = [tok]
+    for i in range(steps - 1):
+        pos = pos + 1
+        tok, caches = decode(params, tok, caches, pos)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,92 @@
+"""Production training loop: sharded step, async checkpoints, fault hooks."""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed.fault import PreemptionGuard, StragglerMonitor
+from repro.models import lm, specs
+from repro.models.sharding import use_mesh
+from repro.train import optimizer
+from repro.train.train_step import make_train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, *,
+                 mesh=None, checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 100, install_signals: bool = False):
+        self.cfg, self.tc, self.mesh = cfg, tc, mesh
+        self.ckpt = Checkpointer(checkpoint_dir) if checkpoint_dir else None
+        self.checkpoint_every = checkpoint_every
+        self.guard = PreemptionGuard(install=install_signals)
+        self.monitor = StragglerMonitor()
+        self.step_num = 0
+
+        with use_mesh(mesh):
+            key = jax.random.PRNGKey(tc.seed)
+            if mesh is not None:
+                shardings = specs.param_shardings(cfg, mesh)
+                self.params = jax.jit(
+                    lambda k: lm.init_params(k, cfg),
+                    out_shardings=shardings)(key)
+            else:
+                self.params = lm.init_params(key, cfg)
+            self.opt_state = optimizer.init(self.params)
+            raw_step = make_train_step(cfg, tc)
+            self._step = jax.jit(raw_step, donate_argnums=(0, 1))
+        self.key = jax.random.PRNGKey(tc.seed + 1)
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self):
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            tree = {"params": self.params, "opt": self.opt_state}
+            restored = self.ckpt.restore(tree)
+            self.params = restored["params"]
+            self.opt_state = restored["opt"]
+            self.step_num = self.ckpt.latest_step()
+            return True
+        return False
+
+    def save(self, async_: bool = True):
+        if not self.ckpt:
+            return
+        tree = {"params": self.params, "opt": self.opt_state}
+        if async_:
+            self.ckpt.save_async(self.step_num, tree)
+        else:
+            self.ckpt.save(self.step_num, tree)
+
+    # ------------------------------------------------------------------
+    def train(self, batches: Iterator[Dict[str, np.ndarray]],
+              steps: int, log_every: int = 10) -> list:
+        history = []
+        with use_mesh(self.mesh):
+            for it in range(steps):
+                batch = next(batches)
+                batch = jax.tree.map(jnp.asarray, batch)
+                self.key, sub = jax.random.split(self.key)
+                self.monitor.start()
+                self.params, self.opt_state, metrics = self._step(
+                    self.params, self.opt_state, batch, sub)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                timing = self.monitor.stop()
+                metrics.update(timing)
+                self.step_num += 1
+                if (self.step_num % log_every == 0 or timing["straggler"]
+                        or it == 0 or it == steps - 1):
+                    history.append({"step": self.step_num, **metrics})
+                if self.ckpt and (self.step_num % self.checkpoint_every == 0
+                                  or self.guard.should_checkpoint):
+                    self.save(async_=not self.guard.should_checkpoint)
+                    if self.guard.should_checkpoint:
+                        self.guard.reset()
+                        break
+        if self.ckpt:
+            self.ckpt.wait()
+        return history

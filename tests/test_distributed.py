@@ -1,0 +1,106 @@
+"""Distributed (shard_map) engine tests on 8 fake CPU devices."""
+import os
+
+# must run before jax initializes; tests/conftest.py keeps other files at 1 dev
+os.environ.setdefault("_REPRO_DIST_TEST", "1")
+
+import numpy as np
+import pytest
+
+import jax
+
+if jax.device_count() < 8:
+    pytest.skip("needs 8 fake devices (run tests/dist/ via run_dist_tests.sh)",
+                allow_module_level=True)
+
+import jax.numpy as jnp
+from repro.configs.base import EngineConfig
+from repro.core import distributed as dist
+from repro.core import metrics
+
+CFG = EngineConfig(dim=128, n_clusters=128, list_capacity=32, nprobe=8, k=10,
+                   kmeans_iters=3, interpret=True)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((4, 2), ("data", "model"))
+
+
+def corpus(n=4096, d=128, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(32, d)).astype(np.float32) * 3
+    x = centers[rng.integers(0, 32, n)] + rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def test_dist_build_query_recall(mesh):
+    x = corpus()
+    ids = np.arange(4096, dtype=np.int32)
+    with mesh:
+        state, spilled = dist.dist_build(
+            jax.random.PRNGKey(0), jnp.asarray(x), jnp.asarray(ids), CFG, mesh)
+        got, _ = dist.dist_query(state, jnp.asarray(x[:16]), CFG, mesh, 10)
+    true = metrics.brute_force_topk(x[:16], x, ids, 10)
+    assert metrics.recall_at_k(np.asarray(got), true) > 0.9
+
+
+def test_dist_no_rows_lost(mesh):
+    x = corpus(2048)
+    ids = np.arange(2048, dtype=np.int32)
+    with mesh:
+        state, _ = dist.dist_build(
+            jax.random.PRNGKey(1), jnp.asarray(x), jnp.asarray(ids), CFG, mesh)
+    live = np.concatenate([np.asarray(state.list_ids).ravel(),
+                           np.asarray(state.spill_ids).ravel()])
+    live = live[live >= 0]
+    assert len(np.unique(live)) == 2048
+
+
+def test_dist_insert_visible_globally(mesh):
+    x = corpus(2048)
+    ids = np.arange(2048, dtype=np.int32)
+    with mesh:
+        state, _ = dist.dist_build(
+            jax.random.PRNGKey(2), jnp.asarray(x), jnp.asarray(ids), CFG, mesh)
+        newx = jnp.asarray(corpus(64, seed=7))
+        newids = jnp.asarray(np.arange(90000, 90064, dtype=np.int32))
+        state, _ = dist.dist_insert(state, newx, newids, CFG, mesh)
+        got, _ = dist.dist_query(state, newx[:8], CFG, mesh, 1)
+    assert np.isin(np.asarray(got)[:, 0], np.arange(90000, 90064)).mean() > 0.8
+
+
+def test_elastic_reshard_roundtrip(tmp_path_factory):
+    """Checkpoint on a 4x2 mesh, elastic-restart into a 2x4 mesh.
+
+    Checkpoints store full arrays, so any live-device factorization can
+    restore — the 1000-node failure story (DESIGN.md §7): lose hosts, call
+    remesh(), reshard_restore(), resume.
+    """
+    import jax.numpy as jnp
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.configs import registry
+    from repro.distributed import elastic
+    from repro.models import lm, specs
+    from repro.models.sharding import use_mesh
+
+    cfg = registry.reduced_arch("granite-3-2b")
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+    with use_mesh(mesh_a):
+        sh_a = specs.param_shardings(cfg, mesh_a)
+        params = jax.jit(lambda k: lm.init_params(k, cfg),
+                         out_shardings=sh_a)(jax.random.PRNGKey(0))
+
+    ckpt = Checkpointer(str(tmp_path_factory.mktemp("elastic")))
+    ckpt.save(7, params)
+
+    # "failure": restart on a different factorization of the same devices
+    mesh_b = elastic.remesh(model_pref=4)
+    assert mesh_b.devices.shape == (2, 4)
+    restored = elastic.reshard_restore(ckpt, params, mesh_b, cfg, step=7)
+
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # restored leaves actually live on the new mesh
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding.mesh.devices.shape == (2, 4)

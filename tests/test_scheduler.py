@@ -1,0 +1,81 @@
+"""Windowed-batch-submission scheduler invariants."""
+import threading
+import time
+
+import pytest
+
+from repro.core.scheduler import Task, WindowedScheduler
+
+
+def _mk(kind="query", backend="throughput", ms=2.0, size=100):
+    def fn():
+        time.sleep(ms / 1e3)
+        return None
+    return Task(fn=fn, kind=kind, backend=backend, size_bytes=size)
+
+
+def test_all_tasks_complete():
+    s = WindowedScheduler(window=4)
+    tasks = [_mk() for _ in range(32)]
+    s.map(tasks)
+    assert all(t.error is None for t in tasks)
+    assert s.stats()["completed"] == 32
+    s.shutdown()
+
+
+def test_windowed_bounds_peak_memory():
+    """Peak in-flight bytes must be <= window * task size (the paper's point)."""
+    s = WindowedScheduler(window=4)
+    s.map([_mk(size=1000) for _ in range(64)])
+    windowed_peak = s.stats()["peak_inflight_bytes"]
+    s.shutdown()
+
+    s2 = WindowedScheduler(window=4, mode="all")
+    s2.map([_mk(size=1000) for _ in range(64)])
+    flood_peak = s2.stats()["peak_inflight_bytes"]
+    s2.shutdown()
+
+    assert windowed_peak <= 4 * 1000
+    assert flood_peak > windowed_peak
+
+
+def test_windowed_faster_than_serial():
+    s = WindowedScheduler(window=8)
+    t0 = time.perf_counter()
+    s.map([_mk(ms=5) for _ in range(24)])
+    windowed = time.perf_counter() - t0
+    s.shutdown()
+
+    s2 = WindowedScheduler(window=1, mode="serial")
+    t0 = time.perf_counter()
+    s2.map([_mk(ms=5) for _ in range(24)])
+    serial = time.perf_counter() - t0
+    s2.shutdown()
+    assert windowed < serial
+
+
+def test_latency_class_isolated_from_background():
+    """Queries keep low tail latency while a rebuild hogs the background lane."""
+    s = WindowedScheduler(window=8)
+    bg = [_mk(kind="rebuild", backend="background", ms=50) for _ in range(4)]
+    for t in bg:
+        s.submit(t)
+    queries = [_mk(kind="query", backend="latency", ms=1) for _ in range(16)]
+    for t in queries:
+        s.submit(t)
+    for t in bg + queries:
+        t.done.wait()
+    st = s.stats()
+    s.shutdown()
+    assert st["query"]["p99_ms"] < st["rebuild"]["p50_ms"]
+
+
+def test_errors_are_captured_not_raised():
+    def boom():
+        raise RuntimeError("kaput")
+    s = WindowedScheduler(window=2)
+    t = Task(fn=boom, kind="query", backend="throughput")
+    s.submit(t)
+    t.done.wait()
+    s.shutdown()
+    assert isinstance(t.error, RuntimeError)
