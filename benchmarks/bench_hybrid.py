@@ -3,20 +3,20 @@
 The paper's claim: heterogeneous scheduling sustains up to 6x higher
 throughput than HNSW under concurrent insert+query, and windowed batch
 submission beats both flood-submission (memory peak) and serial submission
-(pipeline bubbles).  We drive the engine through its WindowedScheduler in
-all three modes and through HNSW serially (its build/search paths are not
-thread-safe — exactly the paper's point about graph indexes under updates),
-measuring insertions/s, queries/s, and the scheduler's peak in-flight bytes.
+(pipeline bubbles).  We drive a `MemoryService` collection through its
+scheduler in all three modes — every op a future — plus a fourth lane that
+answers the same query load via cross-collection *batched* execution over
+two tenants, and HNSW serially (its build/search paths are not thread-safe
+— exactly the paper's point about graph indexes under updates), measuring
+insertions/s, queries/s, and the scheduler's peak in-flight bytes.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks import common
+from repro.api import MemoryOp, MemoryService
 from repro.configs.base import EngineConfig
-from repro.core.engine import AgenticMemoryEngine
 from repro.core.hnsw import HNSW
 from repro.core.scheduler import WindowedScheduler
 
@@ -25,36 +25,62 @@ N_INS, INS_BATCH = 2_048, 64
 N_Q, Q_BATCH = 1_024, 32
 
 
+def _cfg() -> EngineConfig:
+    return EngineConfig(dim=DIM, n_clusters=256, list_capacity=128, k=10,
+                        use_kernel=False, kmeans_iters=4, window=8)
+
+
 def _drive(mode: str):
     x = common.clustered_corpus(N0, DIM, 128, seed=1)
     ins = common.clustered_corpus(N_INS, DIM, 128, seed=2)
     qs = common.clustered_corpus(N_Q, DIM, 128, seed=3)
-    cfg = EngineConfig(dim=DIM, n_clusters=256, list_capacity=128, k=10,
-                       use_kernel=False, kmeans_iters=4, window=8)
     sched = WindowedScheduler(window=8, mode=mode)
-    eng = AgenticMemoryEngine(cfg, scheduler=sched)
-    eng.build(x)
+    svc = MemoryService(scheduler=sched)
+    svc.create_collection("tenant", _cfg())
+    svc.build("tenant", x)
     # warm both jitted paths
-    eng.query(qs[:Q_BATCH], k=10)
-    eng.insert(ins[:INS_BATCH])
+    svc.query("tenant", qs[:Q_BATCH], k=10)
+    svc.insert("tenant", ins[:INS_BATCH])
 
-    tasks = []
+    futs = []
     t0 = time.perf_counter()
     qi = ii = 0
     while qi < N_Q or ii < N_INS:
         if ii < N_INS:
-            tasks.append(eng.submit("insert", ins[ii: ii + INS_BATCH],
-                                    concurrent=True))
+            futs.append(svc.submit(MemoryOp(
+                "insert", "tenant", ins[ii: ii + INS_BATCH],
+                concurrent=True)))
             ii += INS_BATCH
         if qi < N_Q:
-            tasks.append(eng.submit("query", qs[qi: qi + Q_BATCH], k=10))
+            futs.append(svc.submit(MemoryOp(
+                "query", "tenant", qs[qi: qi + Q_BATCH], k=10)))
             qi += Q_BATCH
-    for t in tasks:
-        t.done.wait()
+    for f in futs:
+        f.result()
     wall = time.perf_counter() - t0
     st = sched.stats()
     sched.shutdown()
     return wall, st
+
+
+def _drive_batched():
+    """Two tenants, same query load, fused cross-collection dispatches."""
+    x1 = common.clustered_corpus(N0 // 2, DIM, 128, seed=1)
+    x2 = common.clustered_corpus(N0 // 2, DIM, 128, seed=4)
+    qs = common.clustered_corpus(N_Q, DIM, 128, seed=3)
+    svc = MemoryService(batch_window=8)
+    svc.create_collection("t1", _cfg())
+    svc.create_collection("t2", _cfg())
+    svc.build("t1", x1)
+    svc.build("t2", x2)
+    svc.query_many([("t1", qs[:Q_BATCH]), ("t2", qs[:Q_BATCH])], k=10)  # warm
+    t0 = time.perf_counter()
+    for qi in range(0, N_Q, 2 * Q_BATCH):
+        svc.query_many([("t1", qs[qi: qi + Q_BATCH]),
+                        ("t2", qs[qi + Q_BATCH: qi + 2 * Q_BATCH])], k=10)
+    wall = time.perf_counter() - t0
+    svc.shutdown()
+    return wall
 
 
 def run():
@@ -68,6 +94,10 @@ def run():
                     f"query p99={q_p99:.1f}ms")
         common.emit("hybrid", f"{mode}_peak_inflight", st["peak_inflight_bytes"],
                     "bytes", "windowed decouples peak from total")
+
+    wall = _drive_batched()
+    common.emit("hybrid", "xcoll_batched_qps", round(N_Q / wall, 1), "QPS",
+                "2 tenants fused per dispatch")
 
     # HNSW under the same interleaved load (serial: not thread-safe)
     x = common.clustered_corpus(N0, DIM, 128, seed=1)

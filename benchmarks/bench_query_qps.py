@@ -3,18 +3,19 @@
 AME tile-aligned IVF (probed + full-scan templates) vs the paper's
 baselines: Flat (exact GEMM scan), naive IVF (unaligned cluster count,
 scalar-style gather path = `use_kernel=False, aligned=False`), and HNSW
-(pointer-chasing graph).  Recall is measured against exact fp32 ground
-truth; QPS is single-host XLA:CPU wall time (kernel-path v5e numbers live
-in §Roofline).
+(pointer-chasing graph).  Both IVF variants live as collections of one
+`MemoryService` and are driven through its scheduler-routed query path.
+Recall is measured against exact fp32 ground truth; QPS is single-host
+XLA:CPU wall time (kernel-path v5e numbers live in §Roofline).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import common
+from repro.api import MemoryService
 from repro.configs.base import EngineConfig
 from repro.core import metrics
-from repro.core.engine import AgenticMemoryEngine
 from repro.core.hnsw import HNSW
 
 N, DIM, K, NQ = 10_000, 256, 10, 64
@@ -25,18 +26,19 @@ def run(n: int = N, dim: int = DIM):
     q = x[:NQ] + 0.02 * np.random.default_rng(9).standard_normal(
         (NQ, dim), dtype=np.float32)
     true = metrics.brute_force_topk(q, x, np.arange(n), K)
+    svc = MemoryService()
 
     # ---- AME probed path (the recall-QPS curve; router overridden) ----
     cfg = EngineConfig(dim=dim, n_clusters=256, list_capacity=256, k=K,
                        use_kernel=False, kmeans_iters=6)
-    eng = AgenticMemoryEngine(cfg)
-    eng.build(x, ids=np.arange(n, dtype=np.int32))
+    svc.create_collection("ame", cfg)
+    svc.build("ame", x, ids=np.arange(n, dtype=np.int32))
     qp = q[:16]                     # probed path is per-query (lax.map)
     for nprobe in (4, 16, 64):
-        ids, _ = eng.query(qp, k=K, nprobe=nprobe, path="probed")
+        ids, _ = svc.query("ame", qp, k=K, nprobe=nprobe, path="probed")
         rec = metrics.recall_at_k(ids, true[:16])
         sec = common.timeit(
-            lambda: eng.query(qp, k=K, nprobe=nprobe, path="probed"),
+            lambda: svc.query("ame", qp, k=K, nprobe=nprobe, path="probed"),
             warmup=0, iters=2) * (NQ / 16)
         common.emit("query_qps", f"ame_nprobe{nprobe}_recall",
                     round(rec, 4), "recall@10")
@@ -44,8 +46,8 @@ def run(n: int = N, dim: int = DIM):
                     round(NQ / sec, 1), "QPS")
 
     # ---- AME throughput template (one fused full scan) + Flat anchor ----
-    flat_ids, _ = eng.query(q, k=K, path="full_scan")
-    sec = common.timeit(lambda: eng.query(q, k=K, path="full_scan"))
+    flat_ids, _ = svc.query("ame", q, k=K, path="full_scan")
+    sec = common.timeit(lambda: svc.query("ame", q, k=K, path="full_scan"))
     common.emit("query_qps", "fullscan_recall",
                 round(metrics.recall_at_k(flat_ids, true), 4), "recall@10",
                 "bf16 fused scan (recall<1 = bf16 rank ties)")
@@ -55,18 +57,20 @@ def run(n: int = N, dim: int = DIM):
     ncfg = EngineConfig(dim=dim, n_clusters=200, list_capacity=256, k=K,
                         aligned=False, fused_conversion=False,
                         use_kernel=False, kmeans_iters=6)
-    neng = AgenticMemoryEngine(ncfg)
-    neng.build(x)
+    svc.create_collection("naive", ncfg)
+    svc.build("naive", x)
     for nprobe in (8, 32):
-        ids, _ = neng.query(qp, k=K, nprobe=nprobe, path="probed")
+        ids, _ = svc.query("naive", qp, k=K, nprobe=nprobe, path="probed")
         rec = metrics.recall_at_k(ids, true[:16])
         sec = common.timeit(
-            lambda: neng.query(qp, k=K, nprobe=nprobe, path="probed"),
+            lambda: svc.query("naive", qp, k=K, nprobe=nprobe,
+                              path="probed"),
             warmup=0, iters=2) * (NQ / 16)
         common.emit("query_qps", f"naive_ivf_nprobe{nprobe}_recall",
                     round(rec, 4), "recall@10")
         common.emit("query_qps", f"naive_ivf_nprobe{nprobe}_qps",
                     round(NQ / sec, 1), "QPS")
+    svc.shutdown()
 
     # ---- HNSW (graph baseline) ----
     h = HNSW(dim, m=16, ef_construction=48)

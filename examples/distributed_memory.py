@@ -3,10 +3,11 @@
     PYTHONPATH=src python examples/distributed_memory.py
 
 The paper's engine is single-device.  This example runs the distributed
-tier: the IVF lists shard row-wise over a mesh (here 8 virtual host
-devices), each shard scans locally with the fused-GEMM path, and
-candidates merge into a global top-k — a billion-vector memory has the
-same API as the on-device one.  Includes distributed insert routing.
+tier through the same multi-tenant API as the on-device one: a collection
+created with `shard_db=True` and a mesh shards its IVF lists row-wise over
+8 virtual host devices, each shard scans locally with the fused-GEMM path,
+and candidates merge into a global top-k — a billion-vector memory behind
+the same `MemoryService` calls.  Includes distributed insert routing.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -14,8 +15,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import numpy as np
 
+from repro.api import MemoryService
 from repro.configs.base import EngineConfig
-from repro.core import distributed as dce
 from repro.core import metrics
 
 
@@ -30,27 +31,29 @@ def main():
     x /= np.linalg.norm(x, axis=1, keepdims=True)
     ids = np.arange(n, dtype=np.int32)
 
-    key = jax.random.PRNGKey(0)
-    state, _spilled = dce.dist_build(key, x, ids, cfg, mesh)
+    svc = MemoryService()
+    svc.create_collection("planet", cfg, mesh=mesh)
+    svc.build("planet", x, ids=ids)
     print(f"distributed build ok: lists sharded over "
           f"{mesh.devices.size} devices "
           f"(per-device rows ~ {cfg.capacity // 8})")
 
     q = x[:8] + 0.02 * rng.standard_normal((8, cfg.dim), dtype=np.float32)
-    got_ids, scores = dce.dist_query(state, q, cfg, mesh, k=5)
+    got_ids, scores = svc.query("planet", q, k=5)
     true = metrics.brute_force_topk(q, x, ids, 5)
     rec = metrics.recall_at_k(np.asarray(got_ids), true)
     print(f"distributed query recall@5 = {rec:.3f}")
 
     new = rng.standard_normal((256, cfg.dim), dtype=np.float32)
-    state, spilled = dce.dist_insert(
-        state, new, np.arange(n, n + 256, dtype=np.int32), cfg, mesh)
+    spilled = svc.insert("planet", new,
+                         ids=np.arange(n, n + 256, dtype=np.int32))
     print(f"distributed insert: 256 rows routed to shards "
-          f"({int(np.sum(spilled))} spilled)")
-    got_ids2, _ = dce.dist_query(state, new[:4], cfg, mesh, k=1)
+          f"({spilled} spilled)")
+    got_ids2, _ = svc.query("planet", new[:4], k=1)
     hit = np.mean(np.asarray(got_ids2)[:, 0] >= n)
     print(f"fresh inserts retrievable: {hit:.0%} of probes "
           f"return a new id at rank 1")
+    svc.shutdown()
 
 
 if __name__ == "__main__":

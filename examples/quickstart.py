@@ -1,49 +1,75 @@
-"""Quickstart: the agentic memory engine in 60 seconds.
+"""Quickstart: the multi-tenant agentic memory service in 60 seconds.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds an IVF memory over a small synthetic corpus, queries it, inserts new
-memories, deletes some, rebuilds — the full continuously-learning lifecycle
-from the paper, through the public `AgenticMemoryEngine` facade.
+Two named collections live behind one `MemoryService`.  Every op routes
+through the workload templates and the windowed scheduler: synchronous
+calls, futures, and cross-collection batched queries all take the same
+execution path — and return identical results, which this script asserts.
 """
 import numpy as np
 
+from repro.api import MemoryOp, MemoryService
 from repro.configs.base import EngineConfig
 from repro.core import metrics
-from repro.core.engine import AgenticMemoryEngine
 
 
 def main():
     rng = np.random.default_rng(0)
     dim, n = 256, 8_000
-    corpus = rng.standard_normal((n, dim), dtype=np.float32)
-    corpus /= np.linalg.norm(corpus, axis=1, keepdims=True)
-
     cfg = EngineConfig(dim=dim, n_clusters=128, list_capacity=256,
                        nprobe=16, k=5, use_kernel=False, kmeans_iters=5)
-    engine = AgenticMemoryEngine(cfg)
 
-    stats = engine.build(corpus)
-    print(f"built index over {n} vectors in {stats['build_s']:.2f}s")
+    def corpus(seed):
+        x = np.random.default_rng(seed).standard_normal(
+            (n, dim)).astype(np.float32)
+        return x / np.linalg.norm(x, axis=1, keepdims=True)
 
-    # --- query: recall vs exact ground truth ---
-    q = corpus[:16] + 0.02 * rng.standard_normal((16, dim), dtype=np.float32)
-    ids, scores = engine.query(q, k=5)
-    true = metrics.brute_force_topk(q, corpus, np.arange(n), 5)
-    print(f"recall@5 = {metrics.recall_at_k(ids, true):.3f}")
-    print(f"query 0 -> ids {ids[0].tolist()} scores "
-          f"{np.round(scores[0], 3).tolist()}")
+    notes, docs = corpus(1), corpus(2)
 
-    # --- continual updates: insert / delete / rebuild ---
-    new = rng.standard_normal((512, dim), dtype=np.float32)
-    spilled = engine.insert(new)
-    print(f"inserted 512 rows ({spilled} spilled)")
-    engine.delete(np.arange(100))
-    print(f"deleted 100 ids; live={engine.stats()['live']}")
-    r = engine.rebuild()
-    print(f"rebuilt in {r['rebuild_s']:.2f}s "
-          f"(reclaimed tombstones, drained spill)")
-    print(f"final stats: {engine.stats()}")
+    with MemoryService() as svc:
+        svc.create_collection("notes", cfg)
+        svc.create_collection("docs", cfg)
+        stats = svc.build("notes", notes)
+        svc.build("docs", docs, ids=np.arange(1_000_000, 1_000_000 + n))
+        print(f"built 2 collections x {n} vectors "
+              f"(notes in {stats['build_s']:.2f}s)")
+
+        # --- query: recall vs exact ground truth, per tenant ---
+        q = notes[:16] + 0.02 * rng.standard_normal(
+            (16, dim)).astype(np.float32)
+        ids, scores = svc.query("notes", q, k=5)
+        true = metrics.brute_force_topk(q, notes, np.arange(n), 5)
+        print(f"notes recall@5 = {metrics.recall_at_k(ids, true):.3f}")
+        print(f"query 0 -> ids {ids[0].tolist()} scores "
+              f"{np.round(scores[0], 3).tolist()}")
+
+        # --- same request, three execution modes, identical answers ---
+        qd = docs[:8]
+        sync_ids, _ = svc.query("docs", qd, k=5)
+        fut = svc.submit(MemoryOp("query", "docs", qd, k=5))
+        fut_ids, _ = fut.result()
+        batched = svc.query_many([("notes", q), ("docs", qd)], k=5)
+        np.testing.assert_array_equal(sync_ids, fut_ids)
+        np.testing.assert_array_equal(sync_ids, batched[1][0])
+        np.testing.assert_array_equal(ids, batched[0][0])
+        print("sync == future == cross-collection batched: OK "
+              f"(docs ids all >= 1e6: {(sync_ids >= 1_000_000).all()})")
+
+        # --- continual updates: insert / delete / rebuild, per tenant ---
+        new = rng.standard_normal((512, dim)).astype(np.float32)
+        spilled = svc.insert("notes", new)
+        print(f"inserted 512 rows into notes ({spilled} spilled)")
+        svc.delete("notes", np.arange(100))
+        live = svc.collection("notes").stats()["live"]
+        print(f"deleted 100 ids from notes; live={live}")
+        r = svc.rebuild("notes")
+        print(f"rebuilt notes in {r['rebuild_s']:.2f}s "
+              f"(reclaimed tombstones, drained spill)")
+        st = svc.stats()
+        print(f"final: notes live={st['collections']['notes']['live']} "
+              f"docs live={st['collections']['docs']['live']} "
+              f"scheduler completed={st['scheduler'].get('completed', 0)}")
 
 
 if __name__ == "__main__":

@@ -2,16 +2,17 @@
 
     PYTHONPATH=src python examples/serve_agent.py [--arch granite-3-2b]
 
-A reduced LM + the agentic memory engine run the paper's full loop:
+A reduced LM + the agentic memory service run the paper's full loop:
   1. the agent accumulates "memories" (embedded interactions) continuously,
   2. each user request embeds the prompt, retrieves top-k memories,
   3. retrieval output conditions generation (soft-prefix splice),
-  4. inserts/rebuilds run concurrently through the windowed scheduler —
+  4. inserts run as futures through the service's windowed scheduler —
      queries keep flowing while the memory learns (query-update hybrid
      template).
 
 This wraps `repro.launch.serve` (the production driver) with a small
-multi-turn loop to show memory accumulation across turns.
+multi-turn loop to show memory accumulation across turns, with the agent's
+memory as one collection of a multi-tenant `MemoryService`.
 """
 import argparse
 
@@ -19,10 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import MemoryOp, MemoryService
 from repro.configs import registry
 from repro.configs.base import EngineConfig
-from repro.core.engine import AgenticMemoryEngine
-from repro.core.scheduler import WindowedScheduler
 from repro.models import api, lm
 from repro.serving import rag, serve_step
 
@@ -42,21 +42,24 @@ def main():
     key = jax.random.PRNGKey(0)
     params = lm.init_params(key, cfg)
 
-    sched = WindowedScheduler(window=8)
-    engine = AgenticMemoryEngine(ecfg, scheduler=sched)
+    svc = MemoryService()
+    agent_mem = svc.create_collection("agent", ecfg)
     rng = np.random.default_rng(0)
     seed_mem = rng.standard_normal((1024, ecfg.dim), dtype=np.float32)
-    engine.build(seed_mem / np.linalg.norm(seed_mem, axis=1, keepdims=True))
-    print(f"agent memory online: {engine.stats()['live']} memories")
+    svc.build("agent", seed_mem / np.linalg.norm(seed_mem, axis=1,
+                                                 keepdims=True))
+    print(f"agent memory online: {agent_mem.stats()['live']} memories")
 
     s_max = 64 + args.decode_steps + 1
     prefill = jax.jit(rag.make_rag_prefill(cfg, ecfg, s_max, k=ecfg.k))
     decode = serve_step.make_decode(cfg)
 
+    insert_futs = []
     for turn in range(args.turns):
         batch = api.synth_batch(jax.random.PRNGKey(10 + turn), cfg,
                                 "prefill", 2, 64)
-        logits, caches, pos, mem_ids = prefill(params, engine.state, batch)
+        logits, caches, pos, mem_ids = prefill(params, agent_mem.snapshot(),
+                                               batch)
         tok = jnp.argmax(logits[:, : cfg.vocab_size], -1
                          ).astype(jnp.int32)[:, None]
         outs = [tok]
@@ -70,12 +73,16 @@ def main():
 
         # the turn itself becomes a new memory, inserted concurrently
         q = np.asarray(rag.embed_query(params, cfg, batch["tokens"]))
-        engine.submit("insert", q, concurrent=True)
+        insert_futs.append(svc.submit(
+            MemoryOp("insert", "agent", q, concurrent=True)))
 
-    sched.drain()
-    sched.shutdown()
-    print(f"after {args.turns} turns: {engine.stats()['live']} memories, "
-          f"scheduler {sched.stats()['completed']} background tasks")
+    for fut in insert_futs:
+        fut.result()
+    st = svc.stats()
+    print(f"after {args.turns} turns: "
+          f"{st['collections']['agent']['live']} memories, "
+          f"scheduler {st['scheduler'].get('completed', 0)} tasks")
+    svc.shutdown()
 
 
 if __name__ == "__main__":

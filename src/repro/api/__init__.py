@@ -1,0 +1,22 @@
+"""Multi-tenant agentic-memory API (paper §4 generalised to many tenants).
+
+The paper's engine is a single continuously-learning memory.  This layer
+scales the same functional IVF core to many *named collections* behind one
+`MemoryService`: every operation is a `MemoryOp`, every submission returns
+an `OpFuture`, all work is routed through the workload templates and the
+windowed-batch scheduler, and pending queries against different collections
+with an identical execution signature fuse into one padded GEMM dispatch.
+
+    from repro.api import MemoryService, MemoryOp
+
+    svc = MemoryService()
+    svc.create_collection("notes", cfg)
+    svc.build("notes", vectors)                  # sync = .submit().result()
+    fut = svc.submit(MemoryOp("query", "notes", queries, k=5))
+    ids, scores = fut.result()
+"""
+from repro.api.collection import Collection
+from repro.api.ops import MemoryOp, OpFuture
+from repro.api.service import MemoryService
+
+__all__ = ["Collection", "MemoryOp", "MemoryService", "OpFuture"]

@@ -1,0 +1,266 @@
+"""A named memory collection — one tenant's IVF state, id-space, counters.
+
+This is the per-tenant unit the multi-tenant `MemoryService` schedules over:
+each collection owns its own `IVFState`, its own external-id allocator, its
+own op counters, and its own template thresholds.  Methods here are the raw
+synchronous kernels; the service wraps them in scheduler-routed futures.
+
+Thread-safety: scheduler workers run ops against the same collection from
+multiple threads, so *all* mutable bookkeeping — the state swap, the id
+counter, and the op counters — happens under `_lock` (the seed engine
+mutated counters outside the lock; that race is fixed here).
+
+Persistence: `save_into` / `load_from` write one namespace directory per
+collection (Checkpointer step dirs + `collection.json`), and the metadata
+write is atomic (temp file + `os.replace`) so a crash mid-write can never
+corrupt a restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EngineConfig
+from repro.core import index as ivf
+from repro.core import templates
+
+META_FILE = "collection.json"
+
+
+def atomic_write_json(path: str, payload: dict) -> None:
+    """Crash-safe metadata write: temp file in the same dir + os.replace."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+class Collection:
+    def __init__(self, name: str, cfg: EngineConfig, *, seed: int = 0,
+                 spill_capacity: int = 4096,
+                 thresholds: Optional[templates.TemplateThresholds] = None,
+                 mesh=None):
+        self.name = name
+        self.cfg = cfg
+        self.mesh = mesh
+        if cfg.shard_db and mesh is None:
+            raise ValueError(f"collection {name!r}: shard_db=True needs a mesh")
+        self.key = jax.random.PRNGKey(seed)
+        self.spill_capacity = spill_capacity
+        if self.sharded:
+            from repro.core import distributed as dce
+            self.state = dce.empty_dist_state(cfg, mesh, spill_capacity)
+        else:
+            self.state = ivf.empty_state(cfg, spill_capacity)
+        self.thresholds = thresholds or templates.TemplateThresholds.from_profile(cfg)
+        self._built = False
+        self._lock = threading.RLock()     # guards state swap + all counters
+        self._next_id = 0
+        self.counters = {"queries": 0, "inserts": 0, "deletes": 0,
+                         "rebuilds": 0, "spilled": 0}
+
+    @property
+    def sharded(self) -> bool:
+        return self.cfg.shard_db and self.mesh is not None
+
+    # ------------------------------------------------------------------
+    def _split(self):
+        with self._lock:
+            self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def _ids_for(self, n: int, ids) -> jax.Array:
+        with self._lock:
+            if ids is None:
+                ids = np.arange(self._next_id, self._next_id + n,
+                                dtype=np.int32)
+                self._next_id += n
+            else:
+                ids = np.asarray(ids, np.int32)
+                self._next_id = max(self._next_id, int(ids.max()) + 1)
+        return jnp.asarray(ids)
+
+    def _bump(self, **deltas) -> None:
+        with self._lock:
+            for key, d in deltas.items():
+                self.counters[key] += d
+
+    # ------------------------------------------------------------------
+    # Raw ops (paper templates); the service routes these via the scheduler.
+    # ------------------------------------------------------------------
+    def build(self, vectors, ids=None) -> dict:
+        """Bulk build (paper 'index template')."""
+        x = jnp.asarray(vectors, jnp.float32)
+        ids = self._ids_for(x.shape[0], ids)
+        t0 = time.perf_counter()
+        if self.sharded:
+            from repro.core import distributed as dce
+            state, spilled = dce.dist_build(
+                self._split(), x, ids, self.cfg, self.mesh,
+                spill_capacity_per_shard=self.spill_capacity)
+            spilled = jnp.sum(spilled)
+        else:
+            state, spilled = ivf.build(self._split(), x, ids, self.cfg,
+                                       spill_capacity=self.spill_capacity)
+        jax.block_until_ready(state.lists)
+        with self._lock:
+            self.state = state
+            self._built = True
+            self.counters["rebuilds"] += 1
+            self.counters["spilled"] += int(spilled)
+        return {"build_s": time.perf_counter() - t0, "spilled": int(spilled)}
+
+    def insert(self, vectors, ids=None) -> int:
+        """Insert rows (paper 'update template'). Returns #spilled."""
+        assert self._built, f"build() collection {self.name!r} before inserting"
+        x = jnp.asarray(vectors, jnp.float32)
+        ids = self._ids_for(x.shape[0], ids)
+        with self._lock:
+            if self.sharded:
+                from repro.core import distributed as dce
+                state, spilled = dce.dist_insert(self.state, x, ids,
+                                                 self.cfg, self.mesh)
+                spilled = jnp.sum(spilled)
+            else:
+                # insert_shared (copying), NOT the donating insert: a query
+                # on another worker thread may still hold a snapshot of the
+                # current state, and donation would invalidate its buffers
+                state, spilled = ivf.insert_shared(self.state, x, ids,
+                                                   self.cfg)
+            self.state = state
+            self.counters["inserts"] += int(x.shape[0])
+            self.counters["spilled"] += int(spilled)
+        return int(spilled)
+
+    def delete(self, ids) -> None:
+        if self.sharded:
+            raise NotImplementedError("delete on a sharded collection")
+        with self._lock:
+            self.state = ivf.delete_shared(self.state,
+                                           jnp.asarray(ids, jnp.int32))
+            self.counters["deletes"] += len(np.atleast_1d(np.asarray(ids)))
+
+    def query(self, queries, k: Optional[int] = None,
+              nprobe: Optional[int] = None,
+              path: Optional[str] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (ids i32[B, k], scores f32[B, k]).  Template-routed;
+        `path` ("probed" | "full_scan") overrides the router (benchmarks)."""
+        q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        k, nprobe, path = self.resolve_query(q.shape[0], k, nprobe, path)
+        with self._lock:
+            state = self.state
+            self.counters["queries"] += int(q.shape[0])
+        if self.sharded:
+            from repro.core import distributed as dce
+            ids, scores = dce.dist_query(state, q, self.cfg, self.mesh, k)
+        elif path == "full_scan":
+            ids, scores = ivf.query_full_scan(state, q, self.cfg, k)
+        else:
+            ids, scores = ivf.query_probed(state, q, self.cfg, k, nprobe)
+        return np.asarray(ids), np.asarray(scores)
+
+    def rebuild(self) -> dict:
+        """Reclaim tombstones + drain spill (paper 'index template')."""
+        if self.sharded:
+            raise NotImplementedError("rebuild on a sharded collection")
+        t0 = time.perf_counter()
+        with self._lock:
+            state = self.state
+        new, spilled = ivf.rebuild(self._split(), state, self.cfg)
+        jax.block_until_ready(new.lists)
+        with self._lock:
+            self.state = new           # atomic swap: queries never blocked
+            self.counters["rebuilds"] += 1
+        return {"rebuild_s": time.perf_counter() - t0, "spilled": int(spilled)}
+
+    # ------------------------------------------------------------------
+    def resolve_query(self, batch: int, k, nprobe, path) -> Tuple[int, int, str]:
+        """Resolve query params against collection defaults + the router.
+
+        The resolved triple is part of the batch signature, so sync,
+        future, and cross-collection-batched execution of the same request
+        all take the identical execution path.
+        """
+        k = k or self.cfg.k
+        nprobe = nprobe or self.cfg.nprobe
+        if path is None:
+            path = templates.route("query", batch, self.cfg,
+                                   self.thresholds).path
+        return k, nprobe, path
+
+    def batch_signature(self, batch: int, k, nprobe, path):
+        """Fusion key: collections whose pending queries share this key can
+        stack states and run as one padded GEMM dispatch."""
+        k, nprobe, path = self.resolve_query(batch, k, nprobe, path)
+        return (self.cfg, self.spill_capacity, self.sharded, k, nprobe, path)
+
+    def snapshot(self) -> ivf.IVFState:
+        with self._lock:
+            return self.state
+
+    def stats(self) -> dict:
+        with self._lock:
+            state = self.state
+            counters = dict(self.counters)
+        if self.sharded:
+            s = {"n_clusters": state.n_clusters, "dim": state.dim,
+                 "list_capacity": state.list_capacity,
+                 "live": int(jax.device_get(ivf.live_count(state))),
+                 "spill": int(np.sum(jax.device_get(state.spill_size))),
+                 "deleted": int(np.sum(jax.device_get(state.num_deleted)))}
+        else:
+            s = ivf.stats(state)
+        s.update(counters)
+        return s
+
+    # ------------------------------------------------------------------
+    # Persistence — one namespace directory per collection.
+    # ------------------------------------------------------------------
+    def save_into(self, directory: str, step: int = 0) -> None:
+        from repro.checkpoint.checkpointer import Checkpointer
+        if self.sharded:
+            # restoring would need the mesh + resharding on load; fail at
+            # save time rather than producing an unloadable snapshot
+            raise NotImplementedError(
+                f"collection {self.name!r}: persistence of sharded "
+                "collections is not supported yet")
+        os.makedirs(directory, exist_ok=True)
+        ck = Checkpointer(directory)
+        with self._lock:
+            state = self.state
+            meta = {"name": self.name, "next_id": self._next_id,
+                    "counters": dict(self.counters), "built": self._built,
+                    "spill_capacity": self.spill_capacity, "step": step}
+        ck.save(step, state._asdict())
+        atomic_write_json(os.path.join(directory, META_FILE), meta)
+
+    @classmethod
+    def load_from(cls, directory: str, name: str, cfg: EngineConfig, *,
+                  step: Optional[int] = None, **kw) -> "Collection":
+        from repro.checkpoint.checkpointer import Checkpointer
+        mpath = os.path.join(directory, META_FILE)
+        meta = {}
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                meta = json.load(f)
+        coll = cls(name, cfg,
+                   spill_capacity=int(meta.get("spill_capacity", 4096)), **kw)
+        ck = Checkpointer(directory)
+        restored = ck.restore(coll.state._asdict(), step=step)
+        coll.state = ivf.IVFState(**{k: jnp.asarray(v)
+                                     for k, v in restored.items()})
+        # keep the never-built guard across a save/load round-trip (older
+        # snapshots without the flag were only saved after a build)
+        coll._built = bool(meta.get("built", True))
+        coll._next_id = int(meta.get("next_id", 0))
+        coll.counters.update(meta.get("counters", {}))
+        return coll

@@ -1,0 +1,347 @@
+"""MemoryService — the multi-tenant agentic-memory front door.
+
+Owns many named `Collection`s and one `WindowedScheduler`.  Every operation
+— build, insert, delete, query, rebuild — lowers to a `MemoryOp`, is routed
+through `templates.route` for its execution path / backend class / priority,
+and runs on the scheduler; synchronous calls are thin `.result()` wrappers
+over the same path.  Pending queries submitted with `batch=True` park in a
+bounded window and fuse across collections (see `repro.api.batch`) so tenant
+count scales without per-tenant kernel launches.
+
+Persistence: `save()` writes one service directory —
+
+    <dir>/service.json                 # collection registry (atomic write)
+    <dir>/collections/<name>/          # per-collection namespace
+        step_<N>/...                   # Checkpointer state snapshot
+        collection.json                # id counter + op counters (atomic)
+
+`MemoryService.load()` restores every registered collection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import threading
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api import batch as fuse
+from repro.api.collection import Collection, atomic_write_json
+from repro.api.ops import MemoryOp, OpFuture
+from repro.configs.base import EngineConfig
+from repro.core import templates
+from repro.core.scheduler import Task, WindowedScheduler
+
+SERVICE_FILE = "service.json"
+_NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
+
+
+class MemoryService:
+    def __init__(self, *, scheduler: Optional[WindowedScheduler] = None,
+                 batch_window: int = 8):
+        self._scheduler = scheduler
+        self._own_scheduler = scheduler is None
+        self.batch_window = batch_window
+        self._collections: Dict[str, Collection] = {}
+        self._lock = threading.RLock()
+        self._pending: List[Tuple[MemoryOp, OpFuture]] = []
+
+    @property
+    def scheduler(self) -> WindowedScheduler:
+        """Lazily started so idle services don't hold worker threads."""
+        with self._lock:
+            if self._scheduler is None:
+                self._scheduler = WindowedScheduler()
+            return self._scheduler
+
+    # ------------------------------------------------------------------
+    # Collection registry
+    # ------------------------------------------------------------------
+    def create_collection(self, name: str, cfg: EngineConfig, *,
+                          seed: int = 0, spill_capacity: int = 4096,
+                          thresholds=None, mesh=None) -> Collection:
+        if not _NAME_RE.match(name) or name in (".", ".."):
+            raise ValueError(f"invalid collection name {name!r} "
+                             "(allowed: letters, digits, . _ -)")
+        with self._lock:
+            if name in self._collections:
+                raise ValueError(f"collection {name!r} already exists")
+            coll = Collection(name, cfg, seed=seed,
+                              spill_capacity=spill_capacity,
+                              thresholds=thresholds, mesh=mesh)
+            self._collections[name] = coll
+        return coll
+
+    def collection(self, name: str) -> Collection:
+        with self._lock:
+            try:
+                return self._collections[name]
+            except KeyError:
+                raise KeyError(f"no collection {name!r}; have "
+                               f"{sorted(self._collections)}") from None
+
+    def drop_collection(self, name: str) -> None:
+        with self._lock:
+            self._collections.pop(name, None)
+
+    def list_collections(self) -> List[str]:
+        with self._lock:
+            return sorted(self._collections)
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._collections
+
+    # ------------------------------------------------------------------
+    # Async op API — everything goes through the scheduler.
+    # ------------------------------------------------------------------
+    def submit(self, op: MemoryOp) -> OpFuture:
+        coll = self.collection(op.collection)     # missing tenant fails fast
+        fut = OpFuture(op)
+        if op.batch and op.kind == "query":
+            fut._on_wait = self.flush     # waiting on a parked op flushes
+            with self._lock:
+                self._pending.append((op, fut))
+                full = len(self._pending) >= self.batch_window
+            if full:
+                self.flush()
+            return fut
+
+        plan = templates.route(op.kind, op.batch_size, coll.cfg,
+                               coll.thresholds,
+                               concurrent_queries=op.concurrent)
+
+        def fn():
+            try:
+                out = self._execute(coll, op)
+            except BaseException as e:    # noqa: BLE001 — owed to the future
+                fut._set_error(e)
+                raise
+            fut._set_result(out)
+            return out
+
+        nbytes = getattr(op.payload, "nbytes", 0)
+        task = Task(fn=fn, kind=op.kind, backend=plan.backend,
+                    priority=plan.priority, size_bytes=int(nbytes))
+        fut.task = self.scheduler.submit(task)
+        return fut
+
+    @staticmethod
+    def _execute(coll: Collection, op: MemoryOp):
+        if op.kind == "build":
+            return coll.build(op.payload, ids=op.ids)
+        if op.kind == "insert":
+            return coll.insert(op.payload, ids=op.ids)
+        if op.kind == "delete":
+            return coll.delete(op.payload if op.ids is None else op.ids)
+        if op.kind == "query":
+            return coll.query(op.payload, k=op.k, nprobe=op.nprobe,
+                              path=op.path)
+        if op.kind == "rebuild":
+            return coll.rebuild()
+        raise ValueError(f"unknown op kind {op.kind!r}")
+
+    # ------------------------------------------------------------------
+    # Cross-collection batched execution
+    # ------------------------------------------------------------------
+    def flush(self) -> int:
+        """Fuse pending batched queries and dispatch them.
+
+        Groups pending ops by execution signature; each group becomes ONE
+        scheduler task running one padded-GEMM dispatch over the stacked
+        collection states, demuxed back to the per-op futures.  Returns the
+        number of fused dispatches submitted.
+        """
+        with self._lock:
+            pending, self._pending = self._pending, []
+        if not pending:
+            return 0
+
+        groups: Dict[tuple, List[Tuple[MemoryOp, OpFuture]]] = {}
+        for op, fut in pending:
+            try:
+                coll = self.collection(op.collection)
+                sig = coll.batch_signature(op.batch_size, op.k, op.nprobe,
+                                           op.path)
+            except BaseException as e:    # noqa: BLE001
+                fut._set_error(e)
+                continue
+            groups.setdefault(sig, []).append((op, fut))
+
+        n = 0
+        for sig, ops in groups.items():
+            cfg, _spill, sharded, k, nprobe, path = sig
+            try:
+                if sharded or len(ops) == 1:
+                    # nothing to fuse (or fusion unsupported): fall back to
+                    # the ordinary per-op scheduler path
+                    for op, fut in ops:
+                        self._submit_single_query(op, fut, k, nprobe, path)
+                        n += 1
+                else:
+                    self._submit_fused(ops, cfg, k, nprobe, path)
+                    n += 1
+            except BaseException as e:    # noqa: BLE001 — e.g. a concurrent
+                for _, fut in ops:        # drop_collection; never strand a
+                    if not fut.done():    # future in a dead group
+                        fut._set_error(e)
+        return n
+
+    def _submit_single_query(self, op: MemoryOp, fut: OpFuture,
+                             k: int, nprobe: int, path: str) -> None:
+        coll = self.collection(op.collection)
+
+        def fn():
+            try:
+                out = coll.query(op.payload, k=k, nprobe=nprobe, path=path)
+            except BaseException as e:    # noqa: BLE001
+                fut._set_error(e)
+                raise
+            fut._set_result(out)
+            return out
+
+        plan = templates.route("query", op.batch_size, coll.cfg,
+                               coll.thresholds)
+        nbytes = getattr(op.payload, "nbytes", 0)
+        fut.task = self.scheduler.submit(
+            Task(fn=fn, kind="query", backend=plan.backend,
+                 priority=plan.priority, size_bytes=int(nbytes)))
+
+    def _submit_fused(self, ops: List[Tuple[MemoryOp, OpFuture]],
+                      cfg: EngineConfig, k: int, nprobe: int,
+                      path: str) -> None:
+        # one lane per distinct collection; ops against the same collection
+        # concatenate into its lane and demux by row span
+        lanes: Dict[str, dict] = {}
+        for op, fut in ops:
+            lane = lanes.setdefault(
+                op.collection,
+                {"coll": self.collection(op.collection), "qs": [],
+                 "entries": [], "rows": 0})
+            q = np.atleast_2d(np.asarray(op.payload, np.float32))
+            lane["entries"].append((fut, lane["rows"], lane["rows"] + len(q)))
+            lane["qs"].append(q)
+            lane["rows"] += len(q)
+        order = sorted(lanes)
+        futs = [fut for op, fut in ops]
+
+        def fn():
+            try:
+                results = fuse.execute_group(
+                    [lanes[nm]["coll"] for nm in order],
+                    [np.concatenate(lanes[nm]["qs"]) for nm in order],
+                    cfg, k, nprobe, path)
+                fuse.demux([lanes[nm]["entries"] for nm in order], results)
+            except BaseException as e:    # noqa: BLE001
+                for fut in futs:
+                    if not fut.done():
+                        fut._set_error(e)
+                raise
+            return len(results)
+
+        total = sum(lanes[nm]["rows"] for nm in order)
+        plan = templates.route("query", total, cfg)
+        nbytes = sum(int(getattr(op.payload, "nbytes", 0)) for op, _ in ops)
+        task = Task(fn=fn, kind="query", backend=plan.backend,
+                    priority=plan.priority, size_bytes=nbytes)
+        self.scheduler.submit(task)
+        for fut in futs:
+            fut.task = task
+
+    def query_many(self, requests: Iterable[Tuple[str, "np.ndarray"]],
+                   k: Optional[int] = None, nprobe: Optional[int] = None,
+                   path: Optional[str] = None) -> List[tuple]:
+        """Batched entry point: fuse queries across collections.
+
+        requests: iterable of (collection_name, queries).  Returns per-
+        request (ids, scores) in request order — identical to calling
+        `query()` per request, minus the per-tenant dispatches.
+        """
+        futs = [self.submit(MemoryOp("query", name, q, k=k, nprobe=nprobe,
+                                     path=path, batch=True))
+                for name, q in requests]
+        self.flush()
+        return [f.result() for f in futs]
+
+    # ------------------------------------------------------------------
+    # Synchronous conveniences — thin .result() wrappers.
+    # ------------------------------------------------------------------
+    def build(self, collection: str, vectors, ids=None) -> dict:
+        return self.submit(MemoryOp("build", collection, vectors,
+                                    ids=ids)).result()
+
+    def insert(self, collection: str, vectors, ids=None,
+               concurrent: bool = False) -> int:
+        return self.submit(MemoryOp("insert", collection, vectors, ids=ids,
+                                    concurrent=concurrent)).result()
+
+    def delete(self, collection: str, ids) -> None:
+        return self.submit(MemoryOp("delete", collection, ids)).result()
+
+    def query(self, collection: str, queries, k=None, nprobe=None,
+              path=None) -> tuple:
+        return self.submit(MemoryOp("query", collection, queries, k=k,
+                                    nprobe=nprobe, path=path)).result()
+
+    def rebuild(self, collection: str) -> dict:
+        return self.submit(MemoryOp("rebuild", collection)).result()
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            colls = dict(self._collections)
+            sched = self._scheduler
+        return {"collections": {n: c.stats() for n, c in colls.items()},
+                "scheduler": sched.stats() if sched is not None else {}}
+
+    def shutdown(self) -> None:
+        self.flush()
+        if self._own_scheduler and self._scheduler is not None:
+            self._scheduler.shutdown()
+            self._scheduler = None
+
+    def __enter__(self) -> "MemoryService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------------
+    # Persistence — per-collection namespaces under one service directory.
+    # ------------------------------------------------------------------
+    def save(self, directory: str, step: int = 0) -> None:
+        with self._lock:
+            colls = dict(self._collections)
+        for name, coll in colls.items():   # validate before writing anything
+            if coll.sharded:
+                raise NotImplementedError(
+                    f"collection {name!r} is sharded; persistence of "
+                    "sharded collections is not supported yet")
+        os.makedirs(directory, exist_ok=True)
+        registry = {}
+        for name, coll in colls.items():
+            coll.save_into(os.path.join(directory, "collections", name),
+                           step=step)
+            registry[name] = {"cfg": dataclasses.asdict(coll.cfg)}
+        atomic_write_json(os.path.join(directory, SERVICE_FILE),
+                          {"version": 1, "collections": registry})
+
+    @classmethod
+    def load(cls, directory: str, *,
+             scheduler: Optional[WindowedScheduler] = None,
+             batch_window: int = 8, step: Optional[int] = None,
+             ) -> "MemoryService":
+        with open(os.path.join(directory, SERVICE_FILE)) as f:
+            registry = json.load(f)
+        svc = cls(scheduler=scheduler, batch_window=batch_window)
+        for name, entry in registry["collections"].items():
+            cfg = EngineConfig(**entry["cfg"])
+            coll = Collection.load_from(
+                os.path.join(directory, "collections", name), name, cfg,
+                step=step)
+            with svc._lock:
+                svc._collections[name] = coll
+        return svc

@@ -1,0 +1,20 @@
+"""JAX version compatibility shims.
+
+The codebase targets the `jax.shard_map` API (with its `check_vma` kwarg);
+older jaxlibs ship it as `jax.experimental.shard_map.shard_map` with the
+kwarg named `check_rep`.  `shard_map` here accepts the new-style signature
+on either version.
+"""
+from __future__ import annotations
+
+try:
+    from jax import shard_map as _shard_map          # jax >= 0.6
+    _CHECK_KW = "check_vma"
+except ImportError:                                  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

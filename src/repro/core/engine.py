@@ -1,20 +1,31 @@
-"""AgenticMemoryEngine — the public facade (paper §4.1).
+"""AgenticMemoryEngine — DEPRECATED single-tenant shim (paper §4.1).
 
-Stateful wrapper over the functional IVF core: owns the index state, routes
-operations through workload templates, and (optionally) pushes them through
-the windowed-batch scheduler so queries, inserts, and background rebuilds
-coexist — the paper's continuously-learning on-device memory.
+The public API moved to the multi-tenant service layer:
 
-For distributed operation (`EngineConfig.shard_db=True`) the state lives
-sharded across the mesh and ops go through `core.distributed`.
+    from repro.api import MemoryService, MemoryOp
+
+    svc = MemoryService()
+    svc.create_collection("notes", cfg)
+    svc.build("notes", vectors)
+    ids, scores = svc.query("notes", queries, k=5)
+
+This module keeps the original single-index facade importable as a thin
+wrapper over a one-collection `MemoryService`.  Pre-redesign semantics are
+preserved exactly: the synchronous methods run on the calling thread
+against the collection (they never consume a user-supplied scheduler's
+capacity or show up in its stats), while `submit()` routes through the
+workload templates and the windowed scheduler as before.  All old entry
+points (`build/insert/delete/query/rebuild/submit/stats/save/load`) keep
+their signatures and on-disk layout.  New code should use `MemoryService`
+directly — its sync calls *are* scheduler-routed `.result()` wrappers —
+and this shim will not grow new features.
 """
 from __future__ import annotations
 
-import threading
-import time
+import json
+import os
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -23,146 +34,122 @@ from repro.core import index as ivf
 from repro.core import templates
 from repro.core.scheduler import Task, WindowedScheduler
 
+_COLLECTION = "default"
+
 
 class AgenticMemoryEngine:
+    """Deprecated: use `repro.api.MemoryService` (multi-tenant) instead."""
+
     def __init__(self, cfg: EngineConfig, *, seed: int = 0,
                  scheduler: Optional[WindowedScheduler] = None,
                  spill_capacity: int = 4096,
                  thresholds: Optional[templates.TemplateThresholds] = None):
+        from repro.api import MemoryService
         self.cfg = cfg
-        self.key = jax.random.PRNGKey(seed)
-        self.state = ivf.empty_state(cfg, spill_capacity)
-        self.scheduler = scheduler
-        self.thresholds = thresholds or templates.TemplateThresholds.from_profile(cfg)
-        self._built = False
-        self._lock = threading.RLock()     # state swaps are atomic
-        self._next_id = 0
-        self.counters = {"queries": 0, "inserts": 0, "deletes": 0,
-                         "rebuilds": 0, "spilled": 0}
+        self.scheduler = scheduler        # user-owned; None = service-owned
+        self._service = MemoryService(scheduler=scheduler)
+        self._coll = self._service.create_collection(
+            _COLLECTION, cfg, seed=seed, spill_capacity=spill_capacity,
+            thresholds=thresholds)
 
     # ------------------------------------------------------------------
-    def _split(self):
-        self.key, sub = jax.random.split(self.key)
-        return sub
+    # State passthroughs (tests and the RAG serving path read these)
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> ivf.IVFState:
+        return self._coll.state
 
-    def _ids_for(self, n: int, ids) -> jax.Array:
-        if ids is None:
-            ids = np.arange(self._next_id, self._next_id + n, dtype=np.int32)
-            self._next_id += n
-        else:
-            ids = np.asarray(ids, np.int32)
-            self._next_id = max(self._next_id, int(ids.max()) + 1)
-        return jnp.asarray(ids)
+    @state.setter
+    def state(self, value: ivf.IVFState) -> None:
+        self._coll.state = value
 
+    @property
+    def counters(self) -> dict:
+        return self._coll.counters
+
+    @property
+    def thresholds(self) -> templates.TemplateThresholds:
+        return self._coll.thresholds
+
+    @property
+    def _next_id(self) -> int:
+        return self._coll._next_id
+
+    @_next_id.setter
+    def _next_id(self, value: int) -> None:
+        self._coll._next_id = value
+
+    @property
+    def _built(self) -> bool:
+        return self._coll._built
+
+    @_built.setter
+    def _built(self, value: bool) -> None:
+        self._coll._built = value
+
+    # ------------------------------------------------------------------
+    # Sync facade.  Pre-redesign semantics preserved exactly: these run on
+    # the calling thread and never touch a user-supplied scheduler (whose
+    # observable stats old callers assert on) — the scheduler-routed sync
+    # wrappers live on `MemoryService.build/query/...`.
     # ------------------------------------------------------------------
     def build(self, vectors, ids=None) -> dict:
         """Bulk build (paper 'index template')."""
-        x = jnp.asarray(vectors, jnp.float32)
-        ids = self._ids_for(x.shape[0], ids)
-        t0 = time.perf_counter()
-        state, spilled = ivf.build(self._split(), x, ids, self.cfg,
-                                   spill_capacity=self.state.spill.shape[0])
-        jax.block_until_ready(state.lists)
-        with self._lock:
-            self.state = state
-            self._built = True
-        self.counters["rebuilds"] += 1
-        self.counters["spilled"] += int(spilled)
-        return {"build_s": time.perf_counter() - t0, "spilled": int(spilled)}
+        return self._coll.build(vectors, ids=ids)
 
     def insert(self, vectors, ids=None) -> int:
         """Insert rows (paper 'update template'). Returns #spilled."""
-        assert self._built, "build() an initial index before inserting"
-        x = jnp.asarray(vectors, jnp.float32)
-        ids = self._ids_for(x.shape[0], ids)
-        with self._lock:
-            state, spilled = ivf.insert(self.state, x, ids, self.cfg)
-            self.state = state
-        self.counters["inserts"] += int(x.shape[0])
-        self.counters["spilled"] += int(spilled)
-        return int(spilled)
+        return self._coll.insert(vectors, ids=ids)
 
     def delete(self, ids) -> None:
-        with self._lock:
-            self.state = ivf.delete(self.state, jnp.asarray(ids, jnp.int32))
-        self.counters["deletes"] += len(np.atleast_1d(np.asarray(ids)))
+        return self._coll.delete(ids)
 
     def query(self, queries, k: Optional[int] = None,
               nprobe: Optional[int] = None,
               path: Optional[str] = None) -> Tuple[np.ndarray, np.ndarray]:
-        """Returns (ids i32[B, k], scores f32[B, k]).  Template-routed;
-        `path` ("probed" | "full_scan") overrides the router (benchmarks)."""
-        q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
-        k = k or self.cfg.k
-        nprobe = nprobe or self.cfg.nprobe
-        plan = templates.route("query", q.shape[0], self.cfg, self.thresholds)
-        with self._lock:
-            state = self.state
-        if (path or plan.path) == "full_scan":
-            ids, scores = ivf.query_full_scan(state, q, self.cfg, k)
-        else:
-            ids, scores = ivf.query_probed(state, q, self.cfg, k, nprobe)
-        self.counters["queries"] += int(q.shape[0])
-        return np.asarray(ids), np.asarray(scores)
+        """Returns (ids i32[B, k], scores f32[B, k])."""
+        return self._coll.query(queries, k=k, nprobe=nprobe, path=path)
 
     def rebuild(self) -> dict:
         """Reclaim tombstones + drain spill (paper 'index template')."""
-        t0 = time.perf_counter()
-        with self._lock:
-            state = self.state
-        new, spilled = ivf.rebuild(self._split(), state, self.cfg)
-        jax.block_until_ready(new.lists)
-        with self._lock:
-            self.state = new           # atomic swap: queries never blocked
-        self.counters["rebuilds"] += 1
-        return {"rebuild_s": time.perf_counter() - t0, "spilled": int(spilled)}
+        return self._coll.rebuild()
 
     # ------------------------------------------------------------------
     # Scheduler-mediated async API (paper 'query-update hybrid template')
     # ------------------------------------------------------------------
-    def submit(self, kind: str, payload, **kw) -> Task:
+    def submit(self, kind: str, payload=None, **kw) -> Task:
+        """Returns the scheduler Task (old contract: `.done.wait()`)."""
+        from repro.api import MemoryOp
         assert self.scheduler is not None, "engine created without scheduler"
-        plan = templates.route(kind, getattr(payload, "shape", [1])[0],
-                               self.cfg, self.thresholds,
-                               concurrent_queries=kw.pop("concurrent", False))
-        fn = {
-            "query": lambda: self.query(payload, **kw),
-            "insert": lambda: self.insert(payload, **kw),
-            "delete": lambda: self.delete(payload),
-            "rebuild": lambda: self.rebuild(),
-        }[kind]
-        nbytes = getattr(payload, "nbytes", 0)
-        task = Task(fn=fn, kind=kind, backend=plan.backend,
-                    priority=plan.priority, size_bytes=int(nbytes))
-        return self.scheduler.submit(task)
+        op = MemoryOp(kind, _COLLECTION, payload,
+                      ids=kw.pop("ids", None), k=kw.pop("k", None),
+                      nprobe=kw.pop("nprobe", None),
+                      path=kw.pop("path", None),
+                      concurrent=kw.pop("concurrent", False))
+        assert not kw, f"unknown submit kwargs {sorted(kw)}"
+        return self._service.submit(op).task
 
     def stats(self) -> dict:
-        with self._lock:
-            s = ivf.stats(self.state)
-        s.update(self.counters)
-        return s
+        return self._coll.stats()
 
     # ------------------------------------------------------------------
-    # Persistence — an agentic memory must survive device restarts.
+    # Persistence — keeps the pre-MemoryService single-directory layout.
     # ------------------------------------------------------------------
     def save(self, directory: str, step: int = 0) -> None:
         """Durable snapshot: index state + id counter (atomic commit)."""
-        import json as _json
-        import os as _os
+        from repro.api.collection import atomic_write_json
         from repro.checkpoint.checkpointer import Checkpointer
         ck = Checkpointer(directory)
-        with self._lock:
-            state = self.state
-            meta = {"next_id": self._next_id, "counters": dict(self.counters)}
+        with self._coll._lock:
+            state = self._coll.state
+            meta = {"next_id": self._coll._next_id,
+                    "counters": dict(self._coll.counters)}
         ck.save(step, state._asdict())
-        with open(_os.path.join(directory, "engine.json"), "w") as f:
-            _json.dump(meta, f)
+        atomic_write_json(os.path.join(directory, "engine.json"), meta)
 
     @classmethod
     def load(cls, directory: str, cfg: EngineConfig, *,
              step: Optional[int] = None, **kw) -> "AgenticMemoryEngine":
-        import json as _json
-        import os as _os
         from repro.checkpoint.checkpointer import Checkpointer
         eng = cls(cfg, **kw)
         ck = Checkpointer(directory)
@@ -170,10 +157,10 @@ class AgenticMemoryEngine:
         eng.state = ivf.IVFState(**{k: jnp.asarray(v)
                                     for k, v in restored.items()})
         eng._built = True
-        mpath = _os.path.join(directory, "engine.json")
-        if _os.path.exists(mpath):
+        mpath = os.path.join(directory, "engine.json")
+        if os.path.exists(mpath):
             with open(mpath) as f:
-                meta = _json.load(f)
+                meta = json.load(f)
             eng._next_id = int(meta.get("next_id", 0))
             eng.counters.update(meta.get("counters", {}))
         return eng

@@ -147,22 +147,17 @@ def _batch_ranks(cl: jax.Array) -> jax.Array:
     sorted_cl = cl[order]
     first = jnp.concatenate(
         [jnp.zeros((1,), bool), sorted_cl[1:] != sorted_cl[:-1]])
-    run_start = jnp.maximum.accumulate(
-        jnp.where(first, jnp.arange(b), 0))
+    run_start = jax.lax.cummax(jnp.where(first, jnp.arange(b), 0))
     pos = jnp.arange(b) - run_start
     return jnp.zeros((b,), jnp.int32).at[order].set(pos.astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
-def insert(state: IVFState, x: jax.Array, ids: jax.Array,
-           cfg: EngineConfig) -> Tuple[IVFState, jax.Array]:
+def _insert(state: IVFState, x: jax.Array, ids: jax.Array,
+            cfg: EngineConfig) -> Tuple[IVFState, jax.Array]:
     """Insert rows x f32[B, D] with external ids i32[B].
 
     Assignment is the `kmeans_assign` GEMM kernel (the paper: inserts map to
-    dense matmuls).  The state buffer is donated — updates are in place, the
-    TPU analogue of the paper's zero-copy ION shared buffers.
-
-    Returns (new_state, n_spilled_or_dropped i32[]).
+    dense matmuls).  Returns (new_state, n_spilled_or_dropped i32[]).
     """
     b = x.shape[0]
     l_cap = state.list_capacity
@@ -200,12 +195,21 @@ def insert(state: IVFState, x: jax.Array, ids: jax.Array,
     return new, n_overflow
 
 
+# `insert` donates the state buffer — updates are in place, the TPU analogue
+# of the paper's zero-copy ION shared buffers.  Donation invalidates the old
+# arrays, so it is ONLY safe when the caller is the state's sole owner;
+# `insert_shared` is the copying variant for states that concurrent readers
+# (scheduler-routed queries) may still hold a snapshot of.
+insert = functools.partial(jax.jit, static_argnames=("cfg",),
+                           donate_argnums=(0,))(_insert)
+insert_shared = functools.partial(jax.jit, static_argnames=("cfg",))(_insert)
+
+
 # ---------------------------------------------------------------------------
 # Delete (tombstoning)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def delete(state: IVFState, ids: jax.Array) -> IVFState:
+def _delete(state: IVFState, ids: jax.Array) -> IVFState:
     """Tombstone `ids` i32[B]; slots are reclaimed at the next rebuild."""
 
     def _mask(haystack):
@@ -222,6 +226,11 @@ def delete(state: IVFState, ids: jax.Array) -> IVFState:
         spill_ids=jnp.where(s_hit, -1, state.spill_ids),
         num_deleted=state.num_deleted + n.astype(jnp.int32),
     )
+
+
+# donating / copying split: same rationale as insert / insert_shared above
+delete = functools.partial(jax.jit, donate_argnums=(0,))(_delete)
+delete_shared = jax.jit(_delete)
 
 
 # ---------------------------------------------------------------------------

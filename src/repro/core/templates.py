@@ -7,9 +7,12 @@ matter here are (a) which *execution path* an op takes (probe-path vs
 full-scan GEMM; kernel vs reference), (b) which *mesh slice* runs it, and
 (c) its *scheduler class* (latency-critical vs background, window size).
 
-`route()` is the profiling-guided dispatch: thresholds default to values
-measured by ``benchmarks/bench_gemm_heatmap.py`` (the Fig. 4 analogue) and
-can be re-fit at runtime via ``fit_thresholds``.
+`route()` is the profiling-guided dispatch for every `MemoryOp` the
+multi-tenant `repro.api.MemoryService` submits: each collection carries its
+own `TemplateThresholds`, and the returned `ExecPlan` decides the execution
+path, the scheduler backend class, and the priority of the op.  Thresholds
+default to values measured by ``benchmarks/bench_gemm_heatmap.py`` (the
+Fig. 4 analogue) and can be re-fit at runtime via ``fit_thresholds``.
 """
 from __future__ import annotations
 
@@ -57,7 +60,7 @@ def route(kind: str, batch: int, cfg: EngineConfig,
           concurrent_queries: bool = False) -> ExecPlan:
     """Map (workload kind, batch) -> execution plan.
 
-    kind: "query" | "insert" | "delete" | "rebuild"
+    kind: "build" | "query" | "insert" | "delete" | "rebuild"
     """
     t = thresholds or TemplateThresholds.from_profile(cfg)
     if kind == "query":
@@ -70,6 +73,10 @@ def route(kind: str, batch: int, cfg: EngineConfig,
         return ExecPlan("update", "insert", backend, 1, cfg.window)
     if kind == "delete":
         return ExecPlan("update", "delete", "background", 1, cfg.window)
+    if kind == "build":
+        # bulk build: one-shot index construction, GEMM-heavy like rebuild
+        # but callers usually block on it -> throughput class, not background
+        return ExecPlan("index", "build", "throughput", 1, 1)
     if kind == "rebuild":
         # paper index template: large, latency-insensitive, all units
         return ExecPlan("index", "rebuild", "background", 2, 1)

@@ -80,6 +80,47 @@ def _all_shapes_bytes(sig: str) -> int:
                for m in _SHAPE_RE.finditer(sig))
 
 
+def _operands(opcode: str, ln: str) -> List[Tuple[str, str]]:
+    """Parse an op's operand list into (name, inline_shape) pairs.
+
+    Handles both HLO printer styles: bare names 'dot(%a, %b)' and typed
+    operands 'dot(f32[64,64]{1,0} %a, ...)' (newer XLA).  inline_shape is
+    '' when the printer omitted it — fall back to the symbol table then.
+    """
+    m = re.search(rf"{opcode}\(([^)]*)\)", ln)
+    if not m:
+        return []
+    out = []
+    for tok in _split_args(m.group(1)):
+        tok = tok.strip()
+        if not tok:
+            continue
+        nm = re.search(r"%?([\w.\-]+)\s*$", tok)
+        name = nm.group(1) if nm else tok.lstrip("%")
+        shape = tok if _SHAPE_RE.match(tok) else ""
+        out.append((name, shape))
+    return out
+
+
+def _split_args(s: str) -> List[str]:
+    """Split an operand list on top-level commas only (shape dims and
+    layouts contain commas inside [] / {})."""
+    out, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "[{":
+            depth += 1
+        elif ch in "]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
 def _group_size(line: str, default: int = 1) -> int:
     """Participant count per replica group of a collective op."""
     m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
@@ -160,10 +201,7 @@ def _fusion_root_info(lines: List[str]) -> Tuple[str, float]:
             continue
         name, shape, opcode = m.groups()
         sym[name] = shape.strip()
-        ops_m = re.search(rf"{opcode}\(([^)]*)\)", ln)
-        operands = ([o.strip().lstrip("%") for o in ops_m.group(1).split(",")]
-                    if ops_m else [])
-        defs[name] = (opcode, operands)
+        defs[name] = (opcode, [n for n, _ in _operands(opcode, ln)])
         if ln.lstrip().startswith("ROOT"):
             root = name
     if root is None:
@@ -216,8 +254,9 @@ def parse(hlo: str) -> Dict[str, CompCost]:
                     out_elems = _elems(out_m.group(2))
                     k = 1.0
                     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
-                    ops_m = re.search(r"dot\(\s*%?([\w.\-]+)", ln)
-                    lhs_shape = sym.get(ops_m.group(1), "") if ops_m else ""
+                    dops = _operands("dot", ln)
+                    lhs_shape = ((dops[0][1] or sym.get(dops[0][0], ""))
+                                 if dops else "")
                     lm_ = _SHAPE_RE.match(lhs_shape)
                     if cd and lm_:
                         lhs_dims = [int(x) for x in lm_.group(2).split(",")
@@ -230,12 +269,8 @@ def parse(hlo: str) -> Dict[str, CompCost]:
             base = opcode[:-6] if opcode.endswith("-start") else opcode
             if base in COLLECTIVES:
                 out_b = _all_shapes_bytes(out_shape)
-                ops_m = re.search(rf"{opcode}\(([^)]*)\)", ln)
-                in_b = 0
-                if ops_m:
-                    for op in ops_m.group(1).split(","):
-                        in_b += _all_shapes_bytes(sym.get(
-                            op.strip().lstrip("%"), ""))
+                in_b = sum(_all_shapes_bytes(s or sym.get(n, ""))
+                           for n, s in _operands(opcode, ln))
                 n = _group_size(ln, default=2)
                 ring = (n - 1) / max(n, 1)
                 wire = {
@@ -254,12 +289,8 @@ def parse(hlo: str) -> Dict[str, CompCost]:
             # cache per layer.
             if opcode not in _SKIP_HBM and not opcode.endswith("-done"):
                 out_b = _all_shapes_bytes(out_shape)
-                ops_m = re.search(rf"{opcode}\(([^)]*)\)", ln)
-                operands = ([o.strip().lstrip("%")
-                             for o in ops_m.group(1).split(",")]
-                            if ops_m else [])
-                op_bytes = [_all_shapes_bytes(sym.get(o, ""))
-                            for o in operands]
+                op_bytes = [_all_shapes_bytes(s or sym.get(n, ""))
+                            for n, s in _operands(opcode, ln)]
                 tag = opcode
                 if opcode == "dynamic-update-slice":
                     upd = op_bytes[1] if len(op_bytes) > 1 else 0

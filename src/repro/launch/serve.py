@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import MemoryOp, MemoryService
 from repro.configs import registry
 from repro.configs.base import EngineConfig
-from repro.core.engine import AgenticMemoryEngine
 from repro.core.scheduler import WindowedScheduler
 from repro.launch.mesh import make_production_mesh
 from repro.models import api, lm
@@ -56,18 +56,20 @@ def main(argv=None):
 
     # ---- agentic memory: build + concurrent inserts via the scheduler ----
     sched = WindowedScheduler(window=ecfg.window)
-    engine = AgenticMemoryEngine(ecfg, scheduler=sched)
+    svc = MemoryService(scheduler=sched)
+    memory = svc.create_collection("serve", ecfg)
     corpus = np.random.default_rng(args.seed).standard_normal(
         (args.corpus, ecfg.dim), dtype=np.float32)
     corpus /= np.linalg.norm(corpus, axis=1, keepdims=True)
     t0 = time.perf_counter()
-    stats = engine.build(corpus)
+    stats = svc.build("serve", corpus)
     print(f"memory built: {args.corpus} vectors in {stats['build_s']:.2f}s")
 
     ins = np.random.default_rng(args.seed + 1).standard_normal(
         (args.concurrent_inserts, ecfg.dim), dtype=np.float32)
-    tasks = [engine.submit("insert", ins[i: i + 32])
-             for i in range(0, len(ins), 32)]
+    futs = [svc.submit(MemoryOp("insert", "serve", ins[i: i + 32],
+                                concurrent=True))
+            for i in range(0, len(ins), 32)]
 
     # ---- batched requests through the RAG prefill + decode loop ----
     batch = api.synth_batch(jax.random.PRNGKey(args.seed + 2), cfg,
@@ -78,7 +80,8 @@ def main(argv=None):
 
     with use_mesh(mesh):
         t1 = time.perf_counter()
-        logits, caches, pos, mem_ids = prefill(params, engine.state, batch)
+        logits, caches, pos, mem_ids = prefill(params, memory.snapshot(),
+                                               batch)
         tok = jnp.argmax(
             jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab_size, logits,
                       -jnp.inf), -1).astype(jnp.int32)[:, None]
@@ -91,16 +94,14 @@ def main(argv=None):
         jax.block_until_ready(seq)
         t2 = time.perf_counter()
 
-    for t in tasks:
-        t.done.wait()
-        if t.error is not None:
-            raise t.error
+    for f in futs:
+        f.result()
     sched.shutdown()
     n_tok = args.requests * args.decode_steps
     print(f"retrieved memory ids (req 0): {np.asarray(mem_ids)[0].tolist()}")
     print(f"generated {n_tok} tokens in {t2 - t1:.2f}s "
           f"({n_tok / (t2 - t1):.1f} tok/s, CPU interpret mode)")
-    print(f"engine stats: {engine.stats()}")
+    print(f"memory stats: {memory.stats()}")
     print(f"scheduler: {sched.stats()}")
 
 

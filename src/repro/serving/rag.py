@@ -10,11 +10,14 @@ zero-copy coupling.
 `retrieve_and_prefill`: embed the query tokens (mean-pooled model embeddings
 as the stub embedder), query the agentic memory, splice the top-k memory
 rows into the prompt as prefix soft-embeddings, then prefill.
+
+The memory side of this path is served by the multi-tenant
+`repro.api.MemoryService`: pass a collection's state (`coll.snapshot()` or
+anything `memory_state` accepts) into the jitted step — the functional core
+keeps the fused retrieval inside the XLA program, collection bookkeeping
+stays outside it.
 """
 from __future__ import annotations
-
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +26,16 @@ from repro.configs.base import EngineConfig, ModelConfig
 from repro.core import index as ivf
 from repro.models import layers, lm
 from repro.models.sharding import shard
+
+
+def memory_state(mem) -> ivf.IVFState:
+    """Accept a `repro.api.Collection` (or old engine facade) or a raw
+    IVFState — callers can hand either to the jitted serving step."""
+    if hasattr(mem, "snapshot"):
+        return mem.snapshot()
+    if hasattr(mem, "state"):
+        return mem.state
+    return mem
 
 
 def embed_query(params, cfg: ModelConfig, tokens) -> jax.Array:
@@ -35,7 +48,7 @@ def embed_query(params, cfg: ModelConfig, tokens) -> jax.Array:
 def retrieve(state: ivf.IVFState, q, ecfg: EngineConfig, k: int):
     """Memory lookup (full-scan template; one fused GEMM + top_k).
     Returns (ids [B,k], scores [B,k], rows [B,k,D])."""
-    return ivf.query_full_scan_rows(state, q, ecfg, k)
+    return ivf.query_full_scan_rows(memory_state(state), q, ecfg, k)
 
 
 def make_rag_prefill(cfg: ModelConfig, ecfg: EngineConfig, s_max: int,

@@ -3,7 +3,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import EngineConfig
 from repro.core import index as ivf
@@ -113,19 +112,25 @@ def test_l2_metric_route():
     assert metrics.recall_at_k(ids, true) > 0.9
 
 
-@settings(max_examples=10, deadline=None)
-@given(n=st.integers(200, 1200), seed=st.integers(0, 1000))
-def test_property_live_count_conserved(n, seed):
+def test_property_live_count_conserved():
     """Property: build keeps every valid row somewhere (lists or spill)."""
-    cfg = EngineConfig(dim=128, n_clusters=128, list_capacity=32,
-                       kmeans_iters=1, interpret=True)
-    x = jnp.asarray(corpus(n, seed=seed))
-    ids = jnp.arange(n, dtype=jnp.int32)
-    state, spilled = ivf.build(jax.random.PRNGKey(seed), x, ids, cfg,
-                               spill_capacity=4096)
-    assert int(ivf.live_count(state)) == n
-    # ids are unique across lists+spill
-    all_ids = np.concatenate([np.asarray(state.list_ids).ravel(),
-                              np.asarray(state.spill_ids).ravel()])
-    live = all_ids[all_ids >= 0]
-    assert len(np.unique(live)) == n
+    pytest.importorskip("hypothesis")     # dev-only dep (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(200, 1200), seed=st.integers(0, 1000))
+    def check(n, seed):
+        cfg = EngineConfig(dim=128, n_clusters=128, list_capacity=32,
+                           kmeans_iters=1, interpret=True)
+        x = jnp.asarray(corpus(n, seed=seed))
+        ids = jnp.arange(n, dtype=jnp.int32)
+        state, spilled = ivf.build(jax.random.PRNGKey(seed), x, ids, cfg,
+                                   spill_capacity=4096)
+        assert int(ivf.live_count(state)) == n
+        # ids are unique across lists+spill
+        all_ids = np.concatenate([np.asarray(state.list_ids).ravel(),
+                                  np.asarray(state.spill_ids).ravel()])
+        live = all_ids[all_ids >= 0]
+        assert len(np.unique(live)) == n
+
+    check()

@@ -6,9 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+
+# hypothesis is a dev-only dep (requirements-dev.txt); the property tests
+# below importorskip it so the deterministic sweeps still run without it.
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -57,19 +59,26 @@ def test_scan_scores_unfused_baseline_close():
     np.testing.assert_allclose(fused, unfused, rtol=3e-2, atol=3e-2)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    b=st.integers(1, 40), n=st.integers(1, 600), d=st.sampled_from([32, 96, 128, 320]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_scan_scores_property(b, n, d, seed):
+def test_scan_scores_property():
     """Property: kernel == oracle for arbitrary (unpadded) shapes."""
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    q, db = _rand(k1, (b, d)), _rand(k2, (n, d))
-    ids = jnp.arange(n, dtype=jnp.int32)
-    got = ops.scan_scores(q, db, ids, block_m=8, block_n=128, block_k=128)
-    want = ref.scan_scores_ref(q, db, ids)
-    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 40), n=st.integers(1, 600),
+        d=st.sampled_from([32, 96, 128, 320]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def check(b, n, d, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        q, db = _rand(k1, (b, d)), _rand(k2, (n, d))
+        ids = jnp.arange(n, dtype=jnp.int32)
+        got = ops.scan_scores(q, db, ids, block_m=8, block_n=128, block_k=128)
+        want = ref.scan_scores_ref(q, db, ids)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+    check()
 
 
 # ---------------------------------------------------------------------------
@@ -101,25 +110,34 @@ def test_kmeans_assign_exact_on_separated_clusters():
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(want))
 
 
-@settings(max_examples=20, deadline=None)
-@given(m=st.integers(1, 300), c=st.integers(2, 200), seed=st.integers(0, 2**31 - 1))
-def test_kmeans_assign_property(m, c, seed):
-    d = 64
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    x, cent = _rand(k1, (m, d), scale=5.0), _rand(k2, (c, d), scale=5.0)
-    idx, dist = ops.kmeans_assign(x, cent, block_m=8, block_c=128, block_k=128)
-    assert idx.shape == (m,) and dist.shape == (m,)
-    assert bool(jnp.all((idx >= 0) & (idx < c)))
-    # returned dist must equal the dist of the returned index (self-consistency).
-    # The kernel's fused Data-Adaptation path rounds operands to bf16 before
-    # the MXU dot (fp32 accumulate); the oracle must use the same arithmetic,
-    # or cancellation in cnorm - 2*dot makes fp32-vs-bf16 diffs blow up.
-    cnorm = jnp.sum(cent.astype(jnp.float32) ** 2, axis=1)
-    dots = jax.lax.dot_general(
-        x.astype(jnp.bfloat16), cent.astype(jnp.bfloat16),
-        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    picked = cnorm[idx] - 2 * dots[jnp.arange(m), idx]
-    np.testing.assert_allclose(dist, picked, rtol=1e-5, atol=1e-4)
+def test_kmeans_assign_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 300), c=st.integers(2, 200),
+           seed=st.integers(0, 2**31 - 1))
+    def check(m, c, seed):
+        d = 64
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x, cent = _rand(k1, (m, d), scale=5.0), _rand(k2, (c, d), scale=5.0)
+        idx, dist = ops.kmeans_assign(x, cent, block_m=8, block_c=128,
+                                      block_k=128)
+        assert idx.shape == (m,) and dist.shape == (m,)
+        assert bool(jnp.all((idx >= 0) & (idx < c)))
+        # returned dist must equal the dist of the returned index (self-
+        # consistency).  The kernel's fused Data-Adaptation path rounds
+        # operands to bf16 before the MXU dot (fp32 accumulate); the oracle
+        # must use the same arithmetic, or cancellation in cnorm - 2*dot
+        # makes fp32-vs-bf16 diffs blow up.
+        cnorm = jnp.sum(cent.astype(jnp.float32) ** 2, axis=1)
+        dots = jax.lax.dot_general(
+            x.astype(jnp.bfloat16), cent.astype(jnp.bfloat16),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        picked = cnorm[idx] - 2 * dots[jnp.arange(m), idx]
+        np.testing.assert_allclose(dist, picked, rtol=1e-5, atol=1e-4)
+
+    check()
 
 
 # ---------------------------------------------------------------------------
@@ -148,22 +166,30 @@ def test_segsum_ignores_negative_assignments():
     np.testing.assert_allclose(sums[0], 32.0 * jnp.ones(128), rtol=1e-6)
 
 
-@settings(max_examples=20, deadline=None)
-@given(m=st.integers(1, 400), c=st.sampled_from([4, 32, 100, 128]),
-       seed=st.integers(0, 2**31 - 1))
-def test_segsum_property_mass_conservation(m, c, seed):
+def test_segsum_property_mass_conservation():
     """Property: total counts == #valid rows; column sums == masked column sums."""
-    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    x = _rand(k1, (m, 64))
-    assign = jax.random.randint(k2, (m,), -1, c).astype(jnp.int32)
-    sums, counts = ops.segsum_gemm(x, assign, n_clusters=c,
-                                   block_m=8, block_c=128, block_d=128)
-    n_valid = int(jnp.sum(assign >= 0))
-    assert int(jnp.sum(counts)) == n_valid
-    # oracle in the kernel's arithmetic: the Data-Adaptation path rounds x
-    # to bf16 before the one-hot GEMM (fp32 accumulate), so an fp32 oracle
-    # drifts by ~sqrt(m)*2^-8 and trips any tight tolerance at m~hundreds
-    xb = x.astype(jnp.bfloat16).astype(jnp.float32)
-    want_total = jnp.sum(jnp.where((assign >= 0)[:, None], xb, 0.0), axis=0)
-    np.testing.assert_allclose(jnp.sum(sums, axis=0), want_total,
-                               rtol=1e-4, atol=1e-3)
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 400), c=st.sampled_from([4, 32, 100, 128]),
+           seed=st.integers(0, 2**31 - 1))
+    def check(m, c, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = _rand(k1, (m, 64))
+        assign = jax.random.randint(k2, (m,), -1, c).astype(jnp.int32)
+        sums, counts = ops.segsum_gemm(x, assign, n_clusters=c,
+                                       block_m=8, block_c=128, block_d=128)
+        n_valid = int(jnp.sum(assign >= 0))
+        assert int(jnp.sum(counts)) == n_valid
+        # oracle in the kernel's arithmetic: the Data-Adaptation path rounds
+        # x to bf16 before the one-hot GEMM (fp32 accumulate), so an fp32
+        # oracle drifts by ~sqrt(m)*2^-8 and trips any tight tolerance at
+        # m~hundreds
+        xb = x.astype(jnp.bfloat16).astype(jnp.float32)
+        want_total = jnp.sum(jnp.where((assign >= 0)[:, None], xb, 0.0),
+                             axis=0)
+        np.testing.assert_allclose(jnp.sum(sums, axis=0), want_total,
+                                   rtol=1e-4, atol=1e-3)
+
+    check()
