@@ -17,6 +17,7 @@ with an identical execution signature fuse into one padded GEMM dispatch.
 """
 from repro.api.collection import Collection
 from repro.api.ops import MemoryOp, OpFuture
-from repro.api.service import MemoryService
+from repro.api.service import MaintenanceController, MemoryService
 
-__all__ = ["Collection", "MemoryOp", "MemoryService", "OpFuture"]
+__all__ = ["Collection", "MaintenanceController", "MemoryOp",
+           "MemoryService", "OpFuture"]

@@ -5,10 +5,25 @@ each collection owns its own `IVFState`, its own external-id allocator, its
 own op counters, and its own template thresholds.  Methods here are the raw
 synchronous kernels; the service wraps them in scheduler-routed futures.
 
-Thread-safety: scheduler workers run ops against the same collection from
-multiple threads, so *all* mutable bookkeeping — the state swap, the id
-counter, and the op counters — happens under `_lock` (the seed engine
-mutated counters outside the lock; that race is fixed here).
+Concurrency model (lost-update-safe writes, wait-free reads):
+
+* Queries never block on writers.  They read `self.state` — an atomically
+  swapped snapshot — under `_lock`, a tiny critical section that only ever
+  guards pointer reads/swaps and host counters, never device compute.
+* Writers (build / insert / delete / rebuild-swap) serialize on a dedicated
+  `_writer_lock`.  Insert/delete run their device compute while holding
+  *only* the writer lock, then swap the fresh state in under `_lock`; the
+  query path is never stalled behind an insert's GEMM.
+* `rebuild()` is delta-replay based: it snapshots the state, recomputes
+  off-lock while concurrent writers append their ops to a bounded delta
+  log, then re-acquires the writer lock, replays the log onto the rebuilt
+  state (`ivf.replay`, donating kernels — in-place on device), and swaps.
+  No write that lands during a rebuild is ever lost.  If the log overflows,
+  the rebuild restarts from a fresh snapshot; the final attempt runs with
+  the writer lock held (writers briefly blocked, queries still served).
+  A bulk `build()` bumps `_epoch`, so a rebuild racing it detects that its
+  snapshot is obsolete and aborts instead of resurrecting dead state.
+* Every swap bumps `_version`; `version()` lets callers assert freshness.
 
 Persistence: `save_into` / `load_from` write one namespace directory per
 collection (Checkpointer step dirs + `collection.json`), and the metadata
@@ -21,7 +36,7 @@ import json
 import os
 import threading
 import time
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +63,7 @@ class Collection:
     def __init__(self, name: str, cfg: EngineConfig, *, seed: int = 0,
                  spill_capacity: int = 4096,
                  thresholds: Optional[templates.TemplateThresholds] = None,
+                 delta_log_capacity: int = 1024,
                  mesh=None):
         self.name = name
         self.cfg = cfg
@@ -56,21 +72,70 @@ class Collection:
             raise ValueError(f"collection {name!r}: shard_db=True needs a mesh")
         self.key = jax.random.PRNGKey(seed)
         self.spill_capacity = spill_capacity
-        if self.sharded:
-            from repro.core import distributed as dce
-            self.state = dce.empty_dist_state(cfg, mesh, spill_capacity)
-        else:
-            self.state = ivf.empty_state(cfg, spill_capacity)
+        self.delta_log_capacity = delta_log_capacity
         self.thresholds = thresholds or templates.TemplateThresholds.from_profile(cfg)
         self._built = False
-        self._lock = threading.RLock()     # guards state swap + all counters
+        # _lock: snapshot swap + counters + id allocator (tiny sections only)
+        self._lock = threading.RLock()
+        # _writer_lock: serializes mutators; the query path never takes it
+        self._writer_lock = threading.RLock()
+        # _rebuild_lock: at most one delta-replay rebuild in flight
+        self._rebuild_lock = threading.Lock()
+        self._version = 0          # bumped on every state swap
+        self._epoch = 0            # bumped on bulk build (obsoletes snapshots)
+        self._delta_log: Optional[List[ivf.DeltaOp]] = None
+        self._delta_overflow = False
         self._next_id = 0
         self.counters = {"queries": 0, "inserts": 0, "deletes": 0,
                          "rebuilds": 0, "spilled": 0}
+        # host-side pressure since the last (re)build — what the service's
+        # MaintenanceController polls (no device sync on the poll path).
+        # _spill_floor is the residual spill the last (re)build could not
+        # drain (e.g. a hot cluster larger than its list): pressure below
+        # the floor is irreducible, so maintenance_due ignores it instead
+        # of re-triggering a futile rebuild every poll
+        self._pressure = {"tombstones": 0, "spilled": 0}
+        self._spill_floor = 0
+        if self.sharded:
+            from repro.core import distributed as dce
+            self._state = dce.empty_dist_state(cfg, mesh, spill_capacity)
+        else:
+            self._state = ivf.empty_state(cfg, spill_capacity)
 
     @property
     def sharded(self) -> bool:
         return self.cfg.shard_db and self.mesh is not None
+
+    # ------------------------------------------------------------------
+    # Versioned state snapshot
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> ivf.IVFState:
+        with self._lock:
+            return self._state
+
+    @state.setter
+    def state(self, value: ivf.IVFState) -> None:
+        with self._lock:
+            self._state = value
+            self._version += 1
+
+    def snapshot(self) -> ivf.IVFState:
+        with self._lock:
+            return self._state
+
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    def _swap(self, state: ivf.IVFState, **counter_deltas) -> int:
+        """Atomically publish a new state; returns the new version."""
+        with self._lock:
+            self._state = state
+            self._version += 1
+            for key, d in counter_deltas.items():
+                self.counters[key] += d
+            return self._version
 
     # ------------------------------------------------------------------
     def _split(self):
@@ -94,60 +159,94 @@ class Collection:
             for key, d in deltas.items():
                 self.counters[key] += d
 
+    def _log_delta(self, kind: str, rows, ids) -> None:
+        """Record a write for an in-flight rebuild.  Caller holds
+        `_writer_lock`, so log order == state application order."""
+        with self._lock:
+            if self._delta_log is None:
+                return
+            if len(self._delta_log) >= self.delta_log_capacity:
+                self._delta_overflow = True
+            else:
+                self._delta_log.append(ivf.DeltaOp(kind, rows, ids))
+
     # ------------------------------------------------------------------
     # Raw ops (paper templates); the service routes these via the scheduler.
     # ------------------------------------------------------------------
     def build(self, vectors, ids=None) -> dict:
-        """Bulk build (paper 'index template')."""
+        """Bulk build (paper 'index template').
+
+        Runs under the writer lock: a build replaces the whole index, so it
+        must not interleave with inserts/deletes (the pre-versioned code
+        computed off-lock and swapped unconditionally — the same lost-update
+        race rebuild had).  Queries keep reading the old snapshot throughout.
+        """
         x = jnp.asarray(vectors, jnp.float32)
         ids = self._ids_for(x.shape[0], ids)
         t0 = time.perf_counter()
-        if self.sharded:
-            from repro.core import distributed as dce
-            state, spilled = dce.dist_build(
-                self._split(), x, ids, self.cfg, self.mesh,
-                spill_capacity_per_shard=self.spill_capacity)
-            spilled = jnp.sum(spilled)
-        else:
-            state, spilled = ivf.build(self._split(), x, ids, self.cfg,
-                                       spill_capacity=self.spill_capacity)
-        jax.block_until_ready(state.lists)
-        with self._lock:
-            self.state = state
-            self._built = True
-            self.counters["rebuilds"] += 1
-            self.counters["spilled"] += int(spilled)
-        return {"build_s": time.perf_counter() - t0, "spilled": int(spilled)}
+        with self._writer_lock:
+            if self.sharded:
+                from repro.core import distributed as dce
+                state, spilled = dce.dist_build(
+                    self._split(), x, ids, self.cfg, self.mesh,
+                    spill_capacity_per_shard=self.spill_capacity)
+                spilled = jnp.sum(spilled)
+            else:
+                state, spilled = ivf.build(self._split(), x, ids, self.cfg,
+                                           spill_capacity=self.spill_capacity)
+            jax.block_until_ready(state.lists)
+            spilled = int(spilled)
+            with self._lock:
+                self._built = True
+                self._epoch += 1           # obsoletes in-flight rebuild snapshots
+                self._pressure = {"tombstones": 0, "spilled": spilled}
+                self._spill_floor = spilled
+            self._swap(state, rebuilds=1, spilled=spilled)
+        return {"build_s": time.perf_counter() - t0, "spilled": spilled}
 
     def insert(self, vectors, ids=None) -> int:
-        """Insert rows (paper 'update template'). Returns #spilled."""
+        """Insert rows (paper 'update template'). Returns #spilled.
+
+        Device compute runs under the writer lock only — concurrent queries
+        keep reading the previous snapshot and are never blocked.
+        """
         assert self._built, f"build() collection {self.name!r} before inserting"
         x = jnp.asarray(vectors, jnp.float32)
         ids = self._ids_for(x.shape[0], ids)
-        with self._lock:
+        with self._writer_lock:
             if self.sharded:
                 from repro.core import distributed as dce
-                state, spilled = dce.dist_insert(self.state, x, ids,
+                state, spilled = dce.dist_insert(self._state, x, ids,
                                                  self.cfg, self.mesh)
                 spilled = jnp.sum(spilled)
             else:
-                # insert_shared (copying), NOT the donating insert: a query
-                # on another worker thread may still hold a snapshot of the
+                # insert_shared (copying), NOT the donating insert: queries
+                # on other worker threads may still hold a snapshot of the
                 # current state, and donation would invalidate its buffers
-                state, spilled = ivf.insert_shared(self.state, x, ids,
+                state, spilled = ivf.insert_shared(self._state, x, ids,
                                                    self.cfg)
-            self.state = state
-            self.counters["inserts"] += int(x.shape[0])
-            self.counters["spilled"] += int(spilled)
-        return int(spilled)
+            spilled = int(spilled)         # sync: compute done before publish
+            with self._lock:
+                self._pressure["spilled"] += spilled
+            self._swap(state, inserts=int(x.shape[0]), spilled=spilled)
+            self._log_delta("insert", x, ids)
+        return spilled
 
-    def delete(self, ids) -> None:
+    def delete(self, ids) -> int:
+        """Tombstone `ids`; returns the number of slots actually tombstoned
+        (ids not present contribute nothing — the maintenance triggers that
+        consume the counters see true pressure, not requested counts)."""
         if self.sharded:
             raise NotImplementedError("delete on a sharded collection")
-        with self._lock:
-            self.state = ivf.delete_shared(self.state,
-                                           jnp.asarray(ids, jnp.int32))
-            self.counters["deletes"] += len(np.atleast_1d(np.asarray(ids)))
+        ids = jnp.asarray(np.atleast_1d(np.asarray(ids)), jnp.int32)
+        with self._writer_lock:
+            state, n_hit = ivf.delete_shared(self._state, ids)
+            n_hit = int(n_hit)             # sync: compute done before publish
+            with self._lock:
+                self._pressure["tombstones"] += n_hit
+            self._swap(state, deletes=n_hit)
+            self._log_delta("delete", None, ids)
+        return n_hit
 
     def query(self, queries, k: Optional[int] = None,
               nprobe: Optional[int] = None,
@@ -157,7 +256,7 @@ class Collection:
         q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         k, nprobe, path = self.resolve_query(q.shape[0], k, nprobe, path)
         with self._lock:
-            state = self.state
+            state = self._state
             self.counters["queries"] += int(q.shape[0])
         if self.sharded:
             from repro.core import distributed as dce
@@ -168,19 +267,118 @@ class Collection:
             ids, scores = ivf.query_probed(state, q, self.cfg, k, nprobe)
         return np.asarray(ids), np.asarray(scores)
 
-    def rebuild(self) -> dict:
-        """Reclaim tombstones + drain spill (paper 'index template')."""
+    def rebuild(self, *, max_restarts: int = 2) -> dict:
+        """Reclaim tombstones + drain spill (paper 'index template') without
+        losing concurrent writes.
+
+        Snapshot -> recompute off-lock (writers log their ops to the bounded
+        delta log) -> reacquire the writer lock -> replay the delta onto the
+        rebuilt state -> swap.  On delta-log overflow the rebuild restarts
+        from a fresh snapshot; the final attempt holds the writer lock for
+        the whole recompute (writers wait, queries don't).  If a bulk
+        `build()` lands mid-rebuild the snapshot is obsolete and the rebuild
+        aborts — the build's state wins.
+        """
         if self.sharded:
             raise NotImplementedError("rebuild on a sharded collection")
         t0 = time.perf_counter()
+        with self._rebuild_lock:
+            restarts = 0
+            while True:
+                exclusive = restarts >= max_restarts
+                self._writer_lock.acquire()
+                snap = self._state
+                epoch = self._epoch
+                if not exclusive:
+                    with self._lock:
+                        self._delta_log = []
+                        self._delta_overflow = False
+                    self._writer_lock.release()
+                try:
+                    new, spilled = ivf.rebuild(self._split(), snap, self.cfg)
+                    jax.block_until_ready(new.lists)
+                    spilled = int(spilled)
+                except BaseException:
+                    # stop logging and release cleanly; writes stay applied
+                    if not exclusive:
+                        self._writer_lock.acquire()
+                    try:
+                        with self._lock:
+                            self._delta_log = None
+                            self._delta_overflow = False
+                    finally:
+                        self._writer_lock.release()
+                    raise
+                if not exclusive:
+                    self._writer_lock.acquire()
+                try:
+                    with self._lock:
+                        log = self._delta_log or []
+                        overflow = self._delta_overflow
+                        self._delta_log = None
+                        self._delta_overflow = False
+                    if self._epoch != epoch:
+                        # a bulk build replaced the index mid-rebuild; our
+                        # snapshot (and its tombstones) no longer exist
+                        return {"rebuild_s": time.perf_counter() - t0,
+                                "spilled": 0, "replayed": 0,
+                                "restarts": restarts, "aborted": True}
+                    if overflow:
+                        restarts += 1
+                        continue
+                    replayed = sum(int(op.ids.shape[0]) for op in log)
+                    tombstoned = 0
+                    extra = 0
+                    if log:
+                        new, extra, tombstoned = ivf.replay(new, log, self.cfg)
+                        jax.block_until_ready(new.lists)
+                    # replayed deletes leave real tombstones in the swapped
+                    # state — pressure must reflect them, not reset to zero.
+                    # Only the recompute's own leftover spill becomes the
+                    # floor (this rebuild just proved it cannot be drained);
+                    # replay spill was never tested against a re-cluster, so
+                    # it stays live pressure for the next rebuild to try.
+                    with self._lock:
+                        self._pressure = {"tombstones": tombstoned,
+                                          "spilled": spilled + extra}
+                        self._spill_floor = spilled
+                    spilled += extra
+                    self._swap(new, rebuilds=1)
+                    return {"rebuild_s": time.perf_counter() - t0,
+                            "spilled": spilled, "replayed": replayed,
+                            "restarts": restarts, "aborted": False}
+                finally:
+                    self._writer_lock.release()
+
+    # ------------------------------------------------------------------
+    # Maintenance pressure (consumed by the service's MaintenanceController)
+    # ------------------------------------------------------------------
+    def maintenance_pressure(self) -> dict:
+        """Host-side pressure since the last (re)build — poll-cheap."""
         with self._lock:
-            state = self.state
-        new, spilled = ivf.rebuild(self._split(), state, self.cfg)
-        jax.block_until_ready(new.lists)
+            p = dict(self._pressure)
+            p["delta_backlog"] = (len(self._delta_log)
+                                  if self._delta_log is not None else 0)
+        return p
+
+    def maintenance_due(self) -> bool:
+        """True when tombstone/spill pressure crosses the collection's
+        thresholds and a background rebuild would pay for itself."""
+        if not self._built or self.sharded:
+            return False
+        t = self.thresholds
         with self._lock:
-            self.state = new           # atomic swap: queries never blocked
-            self.counters["rebuilds"] += 1
-        return {"rebuild_s": time.perf_counter() - t0, "spilled": int(spilled)}
+            p = dict(self._pressure)
+            spill_floor = self._spill_floor
+        pending = t.maintenance_min_pending
+        tomb_limit = max(pending,
+                         int(t.maintenance_tombstone_frac * self.cfg.capacity))
+        spill_limit = max(pending,
+                          int(t.maintenance_spill_frac * self.spill_capacity))
+        # only spill above the irreducible floor counts — residual spill the
+        # last rebuild failed to place must not re-trigger it forever
+        return (p["tombstones"] >= tomb_limit
+                or p["spilled"] - spill_floor >= spill_limit)
 
     # ------------------------------------------------------------------
     def resolve_query(self, batch: int, k, nprobe, path) -> Tuple[int, int, str]:
@@ -191,7 +389,8 @@ class Collection:
         all take the identical execution path.
         """
         k = k or self.cfg.k
-        nprobe = nprobe or self.cfg.nprobe
+        # clamp here too so equivalent over-asks share one batch signature
+        nprobe = min(nprobe or self.cfg.nprobe, self.cfg.n_clusters)
         if path is None:
             path = templates.route("query", batch, self.cfg,
                                    self.thresholds).path
@@ -203,14 +402,12 @@ class Collection:
         k, nprobe, path = self.resolve_query(batch, k, nprobe, path)
         return (self.cfg, self.spill_capacity, self.sharded, k, nprobe, path)
 
-    def snapshot(self) -> ivf.IVFState:
-        with self._lock:
-            return self.state
-
     def stats(self) -> dict:
         with self._lock:
-            state = self.state
+            state = self._state
             counters = dict(self.counters)
+            version = self._version
+            pressure = dict(self._pressure)
         if self.sharded:
             s = {"n_clusters": state.n_clusters, "dim": state.dim,
                  "list_capacity": state.list_capacity,
@@ -220,6 +417,8 @@ class Collection:
         else:
             s = ivf.stats(state)
         s.update(counters)
+        s["version"] = version
+        s["pressure"] = pressure
         return s
 
     # ------------------------------------------------------------------
@@ -236,10 +435,11 @@ class Collection:
         os.makedirs(directory, exist_ok=True)
         ck = Checkpointer(directory)
         with self._lock:
-            state = self.state
+            state = self._state
             meta = {"name": self.name, "next_id": self._next_id,
                     "counters": dict(self.counters), "built": self._built,
-                    "spill_capacity": self.spill_capacity, "step": step}
+                    "spill_capacity": self.spill_capacity, "step": step,
+                    "spill_floor": self._spill_floor}
         ck.save(step, state._asdict())
         atomic_write_json(os.path.join(directory, META_FILE), meta)
 
@@ -263,4 +463,14 @@ class Collection:
         coll._built = bool(meta.get("built", True))
         coll._next_id = int(meta.get("next_id", 0))
         coll.counters.update(meta.get("counters", {}))
+        # re-seed maintenance pressure from the restored state so a reload
+        # doesn't silently forget accumulated tombstones/spill; the spill
+        # floor survives the round-trip so known-irreducible spill doesn't
+        # auto-trigger a futile rebuild on every restart
+        st = coll.state
+        coll._pressure = {
+            "tombstones": int(jax.device_get(st.num_deleted)),
+            "spilled": int(jax.device_get(st.spill_size)),
+        }
+        coll._spill_floor = int(meta.get("spill_floor", 0))
         return coll

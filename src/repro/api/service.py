@@ -16,6 +16,15 @@ Persistence: `save()` writes one service directory —
         collection.json                # id counter + op counters (atomic)
 
 `MemoryService.load()` restores every registered collection.
+
+Maintenance: the paper's index template is meant to run *automatically*
+under live traffic, not when a caller remembers to invoke `rebuild()`.
+`MaintenanceController` (started lazily with the first collection unless
+`maintenance=False`) polls each collection's host-side tombstone/spill
+pressure counters and, past the thresholds in its
+`templates.TemplateThresholds`, submits a background-class rebuild through
+the `WindowedScheduler` — the delta-replay rebuild in `Collection` makes
+that safe under concurrent inserts/deletes.
 """
 from __future__ import annotations
 
@@ -24,6 +33,7 @@ import json
 import os
 import re
 import threading
+import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
@@ -39,15 +49,132 @@ SERVICE_FILE = "service.json"
 _NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
 
 
+class MaintenanceController:
+    """Workload-triggered background maintenance for a `MemoryService`.
+
+    A daemon thread polls every collection's `maintenance_due()` (pure host
+    counters — no device sync) and schedules at most one in-flight rebuild
+    per collection through the service's scheduler, on the background
+    backend class the rebuild template routes to.  Queries are isolated
+    from the rebuild both by the scheduler (latency workers never take
+    index work) and by the collection (delta-replay rebuilds never hold the
+    state lock through device compute).
+    """
+
+    def __init__(self, service: "MemoryService", *,
+                 poll_interval_s: float = 0.05,
+                 failure_backoff_s: float = 5.0):
+        self._service = service
+        self.poll_interval_s = poll_interval_s
+        self.failure_backoff_s = failure_backoff_s
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, OpFuture] = {}
+        # persistent rebuild failures must not re-submit every poll
+        self._backoff_until: Dict[str, float] = {}
+        self.triggered = 0
+        self.failed = 0
+        self.last_error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run,
+                                        name="ame-maintenance", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.poll_interval_s):
+            try:
+                self.poll_once()
+            except BaseException as e:   # noqa: BLE001 — keep the loop alive
+                with self._lock:
+                    self.failed += 1
+                    self.last_error = e
+
+    def poll_once(self) -> int:
+        """One maintenance sweep; returns the number of rebuilds scheduled.
+        (Also callable directly — tests and cron-style drivers; safe to race
+        with the daemon poll: the slot is reserved under the lock before the
+        submit, so a collection never gets two concurrent rebuilds.)"""
+        n = 0
+        for name in self._service.list_collections():
+            with self._lock:
+                if name in self._inflight:
+                    fut = self._inflight[name]
+                    # None = another poller reserved the slot mid-submit
+                    if fut is None or not fut.done():
+                        continue          # one in-flight rebuild per tenant
+                    self._inflight.pop(name)
+                    if fut._error is not None:
+                        self.failed += 1
+                        self.last_error = fut._error
+                        self._backoff_until[name] = (
+                            time.monotonic() + self.failure_backoff_s)
+                if time.monotonic() < self._backoff_until.get(name, 0.0):
+                    continue              # failing rebuild: wait out backoff
+            try:
+                coll = self._service.collection(name)
+            except KeyError:
+                continue                  # dropped between list and poll
+            if not coll.maintenance_due():
+                continue
+            with self._lock:
+                if name in self._inflight:
+                    continue              # concurrent poller beat us to it
+                self._inflight[name] = None
+            try:
+                fut = self._service.submit(MemoryOp("rebuild", name))
+            except BaseException as e:    # noqa: BLE001 — release the slot
+                with self._lock:
+                    self._inflight.pop(name, None)
+                    if not isinstance(e, KeyError):
+                        self.failed += 1
+                        self.last_error = e
+                        self._backoff_until[name] = (
+                            time.monotonic() + self.failure_backoff_s)
+                continue
+            with self._lock:
+                self._inflight[name] = fut
+                self.triggered += 1
+            n += 1
+        return n
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        self._thread.join(timeout=timeout)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"triggered": self.triggered, "failed": self.failed,
+                    "inflight": sorted(n for n, f in self._inflight.items()
+                                       if f is None or not f.done()),
+                    "last_error": repr(self.last_error)
+                                  if self.last_error else None}
+
+
 class MemoryService:
     def __init__(self, *, scheduler: Optional[WindowedScheduler] = None,
-                 batch_window: int = 8):
+                 batch_window: int = 8, maintenance: bool = True,
+                 maintenance_poll_interval_s: float = 0.05):
         self._scheduler = scheduler
         self._own_scheduler = scheduler is None
         self.batch_window = batch_window
         self._collections: Dict[str, Collection] = {}
         self._lock = threading.RLock()
         self._pending: List[Tuple[MemoryOp, OpFuture]] = []
+        self._maintenance_enabled = maintenance
+        self._maintenance_poll_interval_s = maintenance_poll_interval_s
+        self._maintenance: Optional[MaintenanceController] = None
+
+    @property
+    def maintenance(self) -> Optional[MaintenanceController]:
+        with self._lock:
+            return self._maintenance
+
+    def _ensure_maintenance(self) -> None:
+        """Started lazily with the first collection: idle services hold
+        neither worker threads nor a poll thread."""
+        with self._lock:
+            if self._maintenance_enabled and self._maintenance is None:
+                self._maintenance = MaintenanceController(
+                    self, poll_interval_s=self._maintenance_poll_interval_s)
 
     @property
     def scheduler(self) -> WindowedScheduler:
@@ -73,6 +200,7 @@ class MemoryService:
                               spill_capacity=spill_capacity,
                               thresholds=thresholds, mesh=mesh)
             self._collections[name] = coll
+        self._ensure_maintenance()
         return coll
 
     def collection(self, name: str) -> Collection:
@@ -278,7 +406,8 @@ class MemoryService:
         return self.submit(MemoryOp("insert", collection, vectors, ids=ids,
                                     concurrent=concurrent)).result()
 
-    def delete(self, collection: str, ids) -> None:
+    def delete(self, collection: str, ids) -> int:
+        """Returns the number of slots actually tombstoned."""
         return self.submit(MemoryOp("delete", collection, ids)).result()
 
     def query(self, collection: str, queries, k=None, nprobe=None,
@@ -294,10 +423,16 @@ class MemoryService:
         with self._lock:
             colls = dict(self._collections)
             sched = self._scheduler
+            maint = self._maintenance
         return {"collections": {n: c.stats() for n, c in colls.items()},
-                "scheduler": sched.stats() if sched is not None else {}}
+                "scheduler": sched.stats() if sched is not None else {},
+                "maintenance": maint.stats() if maint is not None else {}}
 
     def shutdown(self) -> None:
+        with self._lock:
+            maint, self._maintenance = self._maintenance, None
+        if maint is not None:
+            maint.stop()
         self.flush()
         if self._own_scheduler and self._scheduler is not None:
             self._scheduler.shutdown()
@@ -333,10 +468,11 @@ class MemoryService:
     def load(cls, directory: str, *,
              scheduler: Optional[WindowedScheduler] = None,
              batch_window: int = 8, step: Optional[int] = None,
-             ) -> "MemoryService":
+             maintenance: bool = True) -> "MemoryService":
         with open(os.path.join(directory, SERVICE_FILE)) as f:
             registry = json.load(f)
-        svc = cls(scheduler=scheduler, batch_window=batch_window)
+        svc = cls(scheduler=scheduler, batch_window=batch_window,
+                  maintenance=maintenance)
         for name, entry in registry["collections"].items():
             cfg = EngineConfig(**entry["cfg"])
             coll = Collection.load_from(
@@ -344,4 +480,6 @@ class MemoryService:
                 step=step)
             with svc._lock:
                 svc._collections[name] = coll
+        if registry["collections"]:
+            svc._ensure_maintenance()
         return svc

@@ -209,8 +209,13 @@ insert_shared = functools.partial(jax.jit, static_argnames=("cfg",))(_insert)
 # Delete (tombstoning)
 # ---------------------------------------------------------------------------
 
-def _delete(state: IVFState, ids: jax.Array) -> IVFState:
-    """Tombstone `ids` i32[B]; slots are reclaimed at the next rebuild."""
+def _delete(state: IVFState, ids: jax.Array) -> Tuple[IVFState, jax.Array]:
+    """Tombstone `ids` i32[B]; slots are reclaimed at the next rebuild.
+
+    Returns (new_state, n_hit i32[]) where n_hit counts the slots actually
+    tombstoned — ids not present in the index contribute nothing, so callers
+    tracking tombstone pressure stay truthful.
+    """
 
     def _mask(haystack):
         hit = jnp.zeros(haystack.shape, bool)
@@ -220,17 +225,71 @@ def _delete(state: IVFState, ids: jax.Array) -> IVFState:
 
     l_hit = _mask(state.list_ids)
     s_hit = _mask(state.spill_ids)
-    n = jnp.sum(l_hit) + jnp.sum(s_hit)
-    return state._replace(
+    n = (jnp.sum(l_hit) + jnp.sum(s_hit)).astype(jnp.int32)
+    new = state._replace(
         list_ids=jnp.where(l_hit, -1, state.list_ids),
         spill_ids=jnp.where(s_hit, -1, state.spill_ids),
-        num_deleted=state.num_deleted + n.astype(jnp.int32),
+        num_deleted=state.num_deleted + n,
     )
+    return new, n
 
 
 # donating / copying split: same rationale as insert / insert_shared above
 delete = functools.partial(jax.jit, donate_argnums=(0,))(_delete)
 delete_shared = jax.jit(_delete)
+
+
+# ---------------------------------------------------------------------------
+# Delta replay (lost-update-safe rebuilds)
+# ---------------------------------------------------------------------------
+
+class DeltaOp(NamedTuple):
+    """One logged write applied to a collection since a rebuild snapshot.
+
+    kind: "insert" | "delete".  For inserts `rows` is f32[B, D] and `ids`
+    i32[B]; for deletes `rows` is None and `ids` the tombstoned ids.
+    """
+    kind: str
+    rows: Optional[jax.Array]
+    ids: jax.Array
+
+
+def replay_insert(state: IVFState, rows: jax.Array, ids: jax.Array,
+                  cfg: EngineConfig) -> Tuple[IVFState, jax.Array]:
+    """Re-apply one logged insert to a sole-owner state (donating kernel)."""
+    return insert(state, rows, ids, cfg)
+
+
+def replay_delete(state: IVFState, ids: jax.Array) -> Tuple[IVFState, jax.Array]:
+    """Re-apply one logged delete to a sole-owner state (donating kernel)."""
+    return delete(state, ids)
+
+
+def replay(state: IVFState, log, cfg: EngineConfig) -> Tuple[IVFState, int, int]:
+    """Re-apply a delta log (list of `DeltaOp`) in order to `state`.
+
+    The caller must be the state's sole owner (e.g. the freshly rebuilt
+    index before its swap): each step donates the previous state's buffers,
+    so replay is in-place on device.  Returns (state, n_spilled,
+    n_tombstoned): rows the replayed inserts pushed to the spill buffer,
+    and slots the replayed deletes tombstoned — both still pending in the
+    replayed state, so maintenance pressure accounting stays truthful.
+    """
+    # accumulate device scalars and sync once at the end: an int() per op
+    # would cost one host round-trip per log entry while the caller holds
+    # the writer lock
+    spilled = jnp.zeros((), jnp.int32)
+    tombstoned = jnp.zeros((), jnp.int32)
+    for op in log:
+        if op.kind == "insert":
+            state, s = replay_insert(state, op.rows, op.ids, cfg)
+            spilled = spilled + s
+        elif op.kind == "delete":
+            state, n = replay_delete(state, op.ids)
+            tombstoned = tombstoned + n
+        else:
+            raise ValueError(f"unknown delta op kind {op.kind!r}")
+    return state, int(spilled), int(tombstoned)
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +359,9 @@ def query_probed(state: IVFState, q: jax.Array, cfg: EngineConfig,
     working set — the windowed-submission idea applied inside the op.
     """
     c, l, d = state.lists.shape
+    # nprobe is static; clamp so k<=axis holds in the centroid top_k even
+    # when a caller asks for more probes than there are clusters
+    nprobe = max(1, min(nprobe, c))
     cvalid = jnp.arange(state.n_clusters, dtype=jnp.int32)
     cscores = ops.scan_scores(
         q, state.centroids, cvalid, _metric_norms(state.centroids, cfg.metric),

@@ -3,15 +3,26 @@
 The paper's core trade-off: submitting *all* tasks at once maximizes pipeline
 occupancy but the in-flight working set peaks unacceptably; one-task-per-
 worker keeps memory flat but starves the pipeline with bubbles.  Their
-resolution — and ours — is a bounded submission window over a single global
-queue that backend-bound workers *pull* from: peak memory is O(window), load
-balancing is implicit (faster backends pull more), and there is no central
-dispatcher.
+resolution — and ours — is a bounded submission window over per-backend
+queues that backend-bound workers *pull* from: peak memory is O(window),
+load balancing is implicit (faster backends pull more), and there is no
+central dispatcher.
 
 On this host the "backends" are worker threads that each own a class of
 device work (latency / throughput / background — the template classes from
 templates.py).  Dispatched JAX computations are async anyway; workers block
 on completion so in-flight device memory is truly bounded by the window.
+
+Each backend class has its own priority heap under one condition variable:
+a worker pops from its own heap first, then steals per `_steal_order`
+(latency workers never leave their lane; latency tasks are only ever stolen
+by throughput workers), and otherwise *waits* — no pop/requeue spin burning
+CPU when only one task class is queued.
+
+Completed-task history is bounded (`history` tasks, default 1024): `stats()`
+reports cumulative counts and mean waits from per-kind aggregates that never
+reset, and percentiles over the retained window, so sustained traffic can't
+grow the scheduler's footprint without bound.
 
 Modes for the Fig. 7 benchmark: "windowed" (AME), "all" (flood), "serial"
 (one at a time).
@@ -19,11 +30,11 @@ Modes for the Fig. 7 benchmark: "windowed" (AME), "all" (flood), "serial"
 from __future__ import annotations
 
 import collections
-import queue
+import heapq
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 
@@ -51,22 +62,42 @@ class Task:
         return self.end_t - self.submit_t
 
 
+class CompletedTask(NamedTuple):
+    """Lightweight completion record retained for windowed percentiles.
+
+    Deliberately NOT the Task itself: a Task pins its fn closure (op
+    payloads, futures) and result arrays, which would keep up to `history`
+    payloads alive for nothing."""
+    kind: str
+    backend: str
+    latency: float
+    queue_wait: float
+
+
 class WindowedScheduler:
     """Worker-pulled, windowed-batch-submission task scheduler."""
 
     def __init__(self, window: int = 8, mode: str = "windowed",
-                 backends: Dict[str, int] | None = None):
+                 backends: Dict[str, int] | None = None,
+                 history: int = 1024):
         assert mode in ("windowed", "all", "serial")
         self.window = window if mode == "windowed" else (1 if mode == "serial" else 1 << 30)
         self.mode = mode
         # worker threads per backend class (paper: workers bound to CPU/GPU/NPU)
         self.backends = backends or {"latency": 1, "throughput": 1, "background": 1}
-        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
+        self.history = history
+        self._cond = threading.Condition()
+        # one priority heap per backend class; tasks for classes nobody owns
+        # get their own heap and are picked up by stealing workers
+        self._queues: Dict[str, List[Tuple[int, int, Task]]] = {
+            b: [] for b in self.backends}
+        self._stopping = False
         self._sem = threading.Semaphore(self.window)
-        self._stop = threading.Event()
         self._seq = 0
-        self._lock = threading.Lock()
-        self.completed: List[Task] = []
+        self._outstanding = 0            # queued or running (drain target)
+        self.completed: collections.deque = collections.deque(maxlen=history)
+        self._agg: Dict[str, Dict[str, float]] = {}
+        self._n_completed = 0
         self._peak_inflight_bytes = 0
         self._inflight_bytes = 0
         self._threads: List[threading.Thread] = []
@@ -83,13 +114,15 @@ class WindowedScheduler:
         """Windowed submission: blocks while `window` tasks are in flight."""
         self._sem.acquire()
         task.submit_t = time.perf_counter()
-        with self._lock:
+        with self._cond:
             self._seq += 1
+            self._outstanding += 1
             self._inflight_bytes += task.size_bytes
             self._peak_inflight_bytes = max(self._peak_inflight_bytes,
                                             self._inflight_bytes)
-            seq = self._seq
-        self._q.put((task.priority, seq, task))
+            heapq.heappush(self._queues.setdefault(task.backend, []),
+                           (task.priority, self._seq, task))
+            self._cond.notify_all()
         if block and self.mode == "serial":
             task.done.wait()
         return task
@@ -102,29 +135,49 @@ class WindowedScheduler:
         return tasks
 
     def drain(self):
-        self._q.join()
+        with self._cond:
+            self._cond.wait_for(lambda: self._outstanding == 0)
 
     def shutdown(self):
-        self._stop.set()
-        for _ in self._threads:
-            self._q.put((1 << 30, 1 << 30, None))
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
         for t in self._threads:
             t.join(timeout=5)
 
     # ------------------------------------------------------------------
+    def _steal_order(self, backend: str) -> Tuple[str, ...]:
+        """Queues a worker may pop from, in preference order.
+
+        Latency workers stay reserved for latency tasks; latency tasks are
+        only ever stolen by throughput workers (keeps query tail latency
+        isolated from rebuilds); throughput/background steal each other and
+        any unowned backend class freely.
+        """
+        extras = tuple(b for b in self._queues
+                       if b not in ("latency", "throughput", "background"))
+        if backend == "latency":
+            return ("latency",)
+        if backend == "throughput":
+            return ("throughput", "background") + extras + ("latency",)
+        return (backend, "throughput", "background") + extras
+
+    def _try_pop(self, backend: str) -> Optional[Task]:
+        for name in self._steal_order(backend):
+            q = self._queues.get(name)
+            if q:
+                return heapq.heappop(q)[2]
+        return None
+
     def _worker(self, backend: str):
-        while not self._stop.is_set():
-            prio, seq, task = self._q.get()
-            if task is None:
-                self._q.task_done()
-                return
-            # backend binding: a worker only takes its own class; others are
-            # re-queued (cheap — queue ops are ~us, device work is ~ms).
-            if task.backend != backend and not self._claimable(task, backend):
-                self._q.put((prio, seq, task))
-                self._q.task_done()
-                time.sleep(0.0002)
-                continue
+        while True:
+            with self._cond:
+                task = self._try_pop(backend)
+                while task is None:
+                    if self._stopping:
+                        return           # queues we may serve are drained
+                    self._cond.wait()
+                    task = self._try_pop(backend)
             task.start_t = time.perf_counter()
             try:
                 out = task.fn()
@@ -133,47 +186,50 @@ class WindowedScheduler:
             except BaseException as e:   # noqa: BLE001 - reported to caller
                 task.error = e
             task.end_t = time.perf_counter()
-            with self._lock:
+            with self._cond:
                 self._inflight_bytes -= task.size_bytes
-                self.completed.append(task)
+                self._n_completed += 1
+                self.completed.append(CompletedTask(
+                    task.kind, task.backend, task.latency, task.queue_wait))
+                agg = self._agg.setdefault(
+                    task.kind, {"n": 0, "wait_total": 0.0, "lat_total": 0.0})
+                agg["n"] += 1
+                agg["wait_total"] += task.queue_wait
+                agg["lat_total"] += task.latency
             self._sem.release()
             task.done.set()
-            self._q.task_done()
-
-    def _claimable(self, task: Task, backend: str) -> bool:
-        """Work stealing: idle latency workers may take background work,
-        never the reverse (latency tasks only run on the latency backend
-        when one exists — keeps query tail latency isolated from rebuilds).
-        """
-        if backend == "latency":
-            return False                      # latency workers stay reserved
-        if task.backend == "latency":
-            return backend == "throughput" and self._q.qsize() > 0
-        return True                           # throughput/background steal freely
+            # _outstanding is decremented only after done.set(), so a
+            # drain()er waking on 0 never observes a task whose done event
+            # (or result/error fields) has not been finalized yet
+            with self._cond:
+                self._outstanding -= 1
+                self._cond.notify_all()   # wake drain()ers + idle stealers
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
-        with self._lock:
-            done = list(self.completed)
+        with self._cond:
+            recent = list(self.completed)
+            agg = {k: dict(v) for k, v in self._agg.items()}
             peak = self._peak_inflight_bytes
-        by_kind: Dict[str, List[Task]] = collections.defaultdict(list)
-        for t in done:
-            by_kind[t.kind].append(t)
+            n_completed = self._n_completed
 
         def pct(xs, p):
+            # None, not 0.0, when every sample of this kind was evicted
+            # from the window — a fake 0ms percentile reads as "fast"
             if not xs:
-                return 0.0
+                return None
             xs = sorted(xs)
-            return xs[min(len(xs) - 1, int(p * len(xs)))]
+            return 1e3 * xs[min(len(xs) - 1, int(p * len(xs)))]
 
-        out = {"peak_inflight_bytes": peak, "completed": len(done)}
-        for kind, ts in by_kind.items():
-            lats = [t.latency for t in ts]
-            waits = [t.queue_wait for t in ts]
+        out = {"peak_inflight_bytes": peak, "completed": n_completed,
+               "history_retained": len(recent)}
+        for kind, a in agg.items():
+            lats = [t.latency for t in recent if t.kind == kind]
             out[kind] = {
-                "n": len(ts),
-                "p50_ms": 1e3 * pct(lats, 0.50),
-                "p99_ms": 1e3 * pct(lats, 0.99),
-                "mean_wait_ms": 1e3 * (sum(waits) / len(waits)),
+                "n": int(a["n"]),
+                "p50_ms": pct(lats, 0.50),
+                "p99_ms": pct(lats, 0.99),
+                "mean_wait_ms": 1e3 * a["wait_total"] / max(a["n"], 1),
+                "mean_ms": 1e3 * a["lat_total"] / max(a["n"], 1),
             }
         return out

@@ -41,9 +41,20 @@ class TemplateThresholds:
     Cost model: probe ~ B*(C + nprobe*L)*D vs full ~ B*(C*L)*D but with far
     better MXU occupancy; the default assumes occupancy ratio ~8x, i.e.
     switch when B*nprobe >= C/8.
+
+    maintenance_*: workload-triggered rebuild thresholds consumed by the
+    service's `MaintenanceController` (paper: index maintenance interleaves
+    with live traffic instead of waiting for an explicit caller).  A rebuild
+    is scheduled once tombstones exceed `maintenance_tombstone_frac` of the
+    index capacity or spill writes exceed `maintenance_spill_frac` of the
+    spill buffer — but never below `maintenance_min_pending` pending rows,
+    so a handful of deletes can't trigger a full re-cluster.
     """
     full_scan_batch: int = 32
     background_rebuild_chunk: int = 65536
+    maintenance_tombstone_frac: float = 0.1
+    maintenance_spill_frac: float = 0.5
+    maintenance_min_pending: int = 64
 
     @classmethod
     def from_profile(cls, cfg: EngineConfig,

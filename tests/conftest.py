@@ -1,0 +1,9 @@
+"""Shared test helpers."""
+import numpy as np
+
+
+def live_ids(state):
+    """External ids currently live in an IVFState (lists + spill)."""
+    ids = np.concatenate([np.asarray(state.list_ids).ravel(),
+                          np.asarray(state.spill_ids).ravel()])
+    return set(ids[ids >= 0].tolist())

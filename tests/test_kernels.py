@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import live_ids as _live_ids
 
+from repro.configs.base import EngineConfig
+from repro.core import index as ivf
 from repro.kernels import ops, ref
 
 # hypothesis is a dev-only dep (requirements-dev.txt); the property tests
@@ -164,6 +167,71 @@ def test_segsum_ignores_negative_assignments():
     assert counts[0] == 32.0
     assert bool(jnp.all(counts[1:] == 0))
     np.testing.assert_allclose(sums[0], 32.0 * jnp.ones(128), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# IVF index edge cases (probe clamping, delete hit counts, delta replay)
+# ---------------------------------------------------------------------------
+
+_IVF_CFG = EngineConfig(dim=128, n_clusters=128, list_capacity=16, nprobe=8,
+                        k=4, use_kernel=False, kmeans_iters=2)
+
+
+def _small_index(n=256, seed=7):
+    key = jax.random.PRNGKey(seed)
+    x = _rand(key, (n, _IVF_CFG.dim))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    state, _ = ivf.build(jax.random.PRNGKey(seed + 1), x, ids, _IVF_CFG,
+                         spill_capacity=512)
+    return state, x, ids
+
+
+def test_query_probed_clamps_nprobe_to_cluster_count():
+    """nprobe > n_clusters must not crash the centroid top_k (k > axis)."""
+    state, x, _ = _small_index()
+    q = x[:4]
+    ids_all, scores_all = ivf.query_probed(state, q, _IVF_CFG, 4,
+                                           _IVF_CFG.n_clusters)
+    ids_over, scores_over = ivf.query_probed(state, q, _IVF_CFG, 4,
+                                             _IVF_CFG.n_clusters + 37)
+    np.testing.assert_array_equal(np.asarray(ids_over), np.asarray(ids_all))
+    np.testing.assert_allclose(np.asarray(scores_over),
+                               np.asarray(scores_all), rtol=1e-6)
+
+
+def test_delete_returns_actual_hit_count():
+    state, _, _ = _small_index()
+    # 5 present ids + 3 absent ones: only real tombstones are counted
+    req = jnp.asarray([0, 1, 2, 3, 4, 9000, 9001, 9002], jnp.int32)
+    new, n = ivf.delete_shared(state, req)
+    assert int(n) == 5
+    assert int(new.num_deleted) == 5
+    # deleting the same ids again tombstones nothing
+    _, n2 = ivf.delete_shared(new, req)
+    assert int(n2) == 0
+
+
+def test_replay_reapplies_delta_log_in_order():
+    """replay(rebuilt, log) == applying the same ops directly."""
+    state, x, _ = _small_index()
+    key = jax.random.PRNGKey(11)
+    fresh = _rand(key, (24, _IVF_CFG.dim))
+    new_ids = jnp.arange(1000, 1024, dtype=jnp.int32)
+    log = [
+        ivf.DeltaOp("insert", fresh, new_ids),
+        ivf.DeltaOp("delete", None, jnp.asarray([0, 1, 1005], jnp.int32)),
+        ivf.DeltaOp("insert", fresh[:8] + 0.1,
+                    jnp.arange(2000, 2008, dtype=jnp.int32)),
+    ]
+    rebuilt, _ = ivf.rebuild(jax.random.PRNGKey(12), state, _IVF_CFG)
+    replayed, spilled, tombstoned = ivf.replay(rebuilt, log, _IVF_CFG)
+    assert spilled >= 0
+    assert tombstoned == 3            # 0, 1, and the freshly-inserted 1005
+    want = (set(range(256)) | set(range(1000, 1024))
+            | set(range(2000, 2008))) - {0, 1, 1005}
+    assert _live_ids(replayed) == want
+    with pytest.raises(ValueError):
+        ivf.replay(replayed, [ivf.DeltaOp("upsert", None, new_ids)], _IVF_CFG)
 
 
 def test_segsum_property_mass_conservation():

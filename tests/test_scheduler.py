@@ -70,6 +70,70 @@ def test_latency_class_isolated_from_background():
     assert st["query"]["p99_ms"] < st["rebuild"]["p50_ms"]
 
 
+def test_completed_history_bounded_but_stats_cumulative():
+    """Sustained traffic must not grow the scheduler: retained Task history
+    is bounded while counts/means come from cumulative aggregates."""
+    s = WindowedScheduler(window=8, history=16)
+    s.map([_mk(ms=0.5) for _ in range(50)])
+    st = s.stats()
+    s.shutdown()
+    assert st["completed"] == 50                  # cumulative, not truncated
+    assert st["query"]["n"] == 50
+    assert st["query"]["mean_wait_ms"] >= 0.0
+    assert st["history_retained"] <= 16           # bounded retention
+    assert len(s.completed) <= 16
+
+
+def test_percentiles_none_when_kind_evicted_from_window():
+    """A kind whose samples all left the bounded window must report None
+    percentiles, not a fake 0.0 that reads as sub-millisecond latency."""
+    s = WindowedScheduler(window=4, history=4)
+    s.map([_mk(kind="rebuild", backend="background", ms=1) for _ in range(2)])
+    s.map([_mk(kind="query", ms=1) for _ in range(8)])    # evicts rebuilds
+    st = s.stats()
+    s.shutdown()
+    assert st["rebuild"]["n"] == 2                        # cumulative survives
+    assert st["rebuild"]["p50_ms"] is None
+    assert st["rebuild"]["mean_ms"] > 0                   # aggregate survives
+    assert st["query"]["p50_ms"] is not None
+
+
+def test_unowned_backend_class_is_stolen():
+    """Tasks routed to a backend class nobody owns still complete (picked
+    up by throughput/background stealers instead of queueing forever)."""
+    s = WindowedScheduler(window=4)
+    tasks = [_mk(backend="npu") for _ in range(6)]
+    s.map(tasks)
+    s.shutdown()
+    assert all(t.error is None and t.done.is_set() for t in tasks)
+
+
+def test_latency_tasks_never_run_on_background_workers():
+    names = []
+
+    def fn():
+        names.append(threading.current_thread().name)
+        time.sleep(0.001)
+
+    s = WindowedScheduler(window=8)
+    tasks = [Task(fn=fn, kind="query", backend="latency") for _ in range(12)]
+    s.map(tasks)
+    s.shutdown()
+    assert len(names) == 12
+    assert all(not n.startswith("ame-background") for n in names)
+
+
+def test_drain_waits_for_everything_outstanding():
+    s = WindowedScheduler(window=4)
+    tasks = [_mk(ms=10) for _ in range(8)]
+    for t in tasks:
+        s.submit(t)
+    s.drain()
+    assert all(t.done.is_set() for t in tasks)
+    assert s.stats()["completed"] == 8
+    s.shutdown()
+
+
 def test_errors_are_captured_not_raised():
     def boom():
         raise RuntimeError("kaput")
