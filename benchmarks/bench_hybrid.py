@@ -15,7 +15,12 @@ and the scheduler's peak in-flight bytes.
 """
 from __future__ import annotations
 
+import os
 import time
+
+# the sharded-maintenance lane wants a (tiny) real mesh; only effective when
+# this process initializes jax itself (harmless otherwise — the lane skips)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
 
 import numpy as np
 
@@ -145,6 +150,64 @@ def _drive_maintenance():
     return wall, max(st["rebuilds"] - 1, 0), maint.get("triggered", 0)
 
 
+def _drive_sharded_maintenance():
+    """Shard-local maintenance lane: the same hybrid+deletes load against a
+    mesh-sharded collection.  Per-shard tombstone pressure auto-triggers
+    shard-local rebuilds (one shard compacted at a time — siblings keep
+    serving unchanged), so the reported QPS/IPS include live *per-shard*
+    maintenance.  Returns None when the process has a single device.
+    """
+    import jax
+    if jax.device_count() < 2:
+        return None
+    mesh = jax.make_mesh((jax.device_count(),), ("shard",))
+    n_shards = mesh.size
+    cfg = EngineConfig(dim=DIM, n_clusters=256, list_capacity=128, k=10,
+                       use_kernel=False, kmeans_iters=4, window=8,
+                       shard_db=True)
+    th = templates.TemplateThresholds(
+        maintenance_tombstone_frac=0.02, maintenance_min_pending=128,
+        maintenance_shard_min_pending=64)      # shards see 1/S of the load
+    x = common.clustered_corpus(N0, DIM, 128, seed=1)
+    ins = common.clustered_corpus(N_INS, DIM, 128, seed=2)
+    qs = common.clustered_corpus(N_Q, DIM, 128, seed=3)
+    svc = MemoryService(maintenance_poll_interval_s=0.02)
+    svc.create_collection("tenant", cfg, mesh=mesh, thresholds=th)
+    svc.build("tenant", x[: N0 - N0 % n_shards])
+    svc.query("tenant", qs[:Q_BATCH], k=10)    # warm both jitted paths
+    svc.insert("tenant", ins[:INS_BATCH])
+
+    futs = []
+    t0 = time.perf_counter()
+    qi = ii = di = 0
+    while qi < N_Q or ii < N_INS or di < N_DEL:
+        if ii < N_INS:
+            futs.append(svc.submit(MemoryOp(
+                "insert", "tenant", ins[ii: ii + INS_BATCH],
+                concurrent=True)))
+            ii += INS_BATCH
+        if di < N_DEL:
+            futs.append(svc.submit(MemoryOp(
+                "delete", "tenant", np.arange(di, di + DEL_BATCH))))
+            di += DEL_BATCH
+        if qi < N_Q:
+            futs.append(svc.submit(MemoryOp(
+                "query", "tenant", qs[qi: qi + Q_BATCH], k=10)))
+            qi += Q_BATCH
+    for f in futs:
+        f.result()
+    wall = time.perf_counter() - t0
+    deadline = time.time() + 120
+    while time.time() < deadline:
+        st = svc.collection("tenant").stats()
+        maint = svc.stats()["maintenance"]
+        if st["rebuilds"] >= 2 and not maint.get("inflight"):
+            break
+        time.sleep(0.1)
+    svc.shutdown()
+    return wall, max(st["rebuilds"] - 1, 0), maint.get("triggered", 0), n_shards
+
+
 def run():
     for mode in ("windowed", "all", "serial"):
         wall, st = _drive(mode)
@@ -168,6 +231,19 @@ def run():
                 "auto-maintenance on")
     common.emit("hybrid", "maint_auto_rebuilds", rebuilds, "rebuilds",
                 f"{triggered} controller-triggered, 0 caller-invoked")
+
+    sharded = _drive_sharded_maintenance()
+    if sharded is None:
+        common.emit("hybrid", "shard_maint", "skipped", "",
+                    "single device; set XLA_FLAGS host device count >= 2")
+    else:
+        wall, rebuilds, triggered, n_shards = sharded
+        common.emit("hybrid", "shard_maint_ips", round(N_INS / wall, 1),
+                    "inserts/s", f"{n_shards}-shard mesh, auto-maintenance")
+        common.emit("hybrid", "shard_maint_qps", round(N_Q / wall, 1),
+                    "QPS", f"{n_shards}-shard mesh, auto-maintenance")
+        common.emit("hybrid", "shard_maint_auto_rebuilds", rebuilds,
+                    "shard-local rebuilds", f"{triggered} controller-triggered")
 
     # HNSW under the same interleaved load (serial: not thread-safe)
     x = common.clustered_corpus(N0, DIM, 128, seed=1)

@@ -7,7 +7,9 @@ tier through the same multi-tenant API as the on-device one: a collection
 created with `shard_db=True` and a mesh shards its IVF lists row-wise over
 8 virtual host devices, each shard scans locally with the fused-GEMM path,
 and candidates merge into a global top-k — a billion-vector memory behind
-the same `MemoryService` calls.  Includes distributed insert routing.
+the same `MemoryService` calls.  Includes distributed insert routing,
+shard-local deletes + rebuild (one shard compacted, siblings untouched —
+see docs/ARCHITECTURE.md), and sharded save/load.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -53,6 +55,29 @@ def main():
     hit = np.mean(np.asarray(got_ids2)[:, 0] >= n)
     print(f"fresh inserts retrievable: {hit:.0%} of probes "
           f"return a new id at rank 1")
+
+    # shard-local maintenance: tombstone rows, compact ONE shard at a time
+    n_hit = svc.delete("planet", np.arange(512))
+    coll = svc.collection("planet")
+    hot = int(np.argmax([s["tombstones"]
+                         for s in coll.maintenance_pressure()["shards"]]))
+    v_before = coll.shard_versions()
+    out = svc.rebuild("planet", shard=hot)
+    v_after = coll.shard_versions()
+    untouched = sum(a == b for a, b in zip(v_before, v_after))
+    print(f"deleted {n_hit} rows; shard-local rebuild of shard {hot} "
+          f"reclaimed its tombstones in {out['rebuild_s']:.2f}s "
+          f"({untouched}/{len(v_after)} sibling shards untouched)")
+
+    # sharded persistence: one checkpoint namespace per shard
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        svc.save(d)
+        restored = MemoryService.load(d, mesh=mesh, maintenance=False)
+        st = restored.collection("planet").stats()
+        print(f"sharded save/load round-trip: {st['live']} live rows on "
+              f"{st['shards']} shards")
+        restored.shutdown()
     svc.shutdown()
 
 

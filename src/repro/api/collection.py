@@ -25,10 +25,21 @@ Concurrency model (lost-update-safe writes, wait-free reads):
   snapshot is obsolete and aborts instead of resurrecting dead state.
 * Every swap bumps `_version`; `version()` lets callers assert freshness.
 
+Sharded collections (``shard_db=True`` + a mesh) run the same lifecycle
+with *per-shard* maintenance state: the delta log, tombstone/spill pressure
+counters, spill floor, and version counter are all tracked per shard, and
+`rebuild(shard=i)` compacts shard ``i`` alone — sibling shards' arrays and
+versions are untouched, so one hot shard's maintenance never stalls the
+rest (see `repro.core.distributed` and docs/ARCHITECTURE.md).  The
+unsharded collection is simply the 1-shard special case of the same
+machinery.
+
 Persistence: `save_into` / `load_from` write one namespace directory per
 collection (Checkpointer step dirs + `collection.json`), and the metadata
 write is atomic (temp file + `os.replace`) so a crash mid-write can never
-corrupt a restore.
+corrupt a restore.  Sharded collections write one `shard_<i>` namespace per
+shard plus the mesh shape in the metadata; loading checks the mesh shape
+and can re-pack host-side onto a different mesh (``reshard=True``).
 """
 from __future__ import annotations
 
@@ -79,23 +90,35 @@ class Collection:
         self._lock = threading.RLock()
         # _writer_lock: serializes mutators; the query path never takes it
         self._writer_lock = threading.RLock()
-        # _rebuild_lock: at most one delta-replay rebuild in flight
-        self._rebuild_lock = threading.Lock()
         self._version = 0          # bumped on every state swap
         self._epoch = 0            # bumped on bulk build (obsoletes snapshots)
-        self._delta_log: Optional[List[ivf.DeltaOp]] = None
-        self._delta_overflow = False
         self._next_id = 0
         self.counters = {"queries": 0, "inserts": 0, "deletes": 0,
                          "rebuilds": 0, "spilled": 0}
-        # host-side pressure since the last (re)build — what the service's
-        # MaintenanceController polls (no device sync on the poll path).
-        # _spill_floor is the residual spill the last (re)build could not
-        # drain (e.g. a hot cluster larger than its list): pressure below
-        # the floor is irreducible, so maintenance_due ignores it instead
-        # of re-triggering a futile rebuild every poll
-        self._pressure = {"tombstones": 0, "spilled": 0}
-        self._spill_floor = 0
+        # Per-shard maintenance state; the unsharded collection is the
+        # 1-shard special case.  Shard i's entries are only ever touched by
+        # ops that land on shard i, so the MaintenanceController can
+        # schedule shard-local rebuilds independently:
+        #   _rebuild_locks   at most one delta-replay rebuild per shard
+        #   _delta_logs      write log while shard i's rebuild recomputes
+        #   _shard_versions  bumped when shard i's slice changes
+        #   _shard_pressure  host-side tombstone/spill counters since the
+        #                    last (re)build of shard i — what the service's
+        #                    MaintenanceController polls (no device sync)
+        #   _spill_floors    residual spill the last rebuild of shard i
+        #                    could not drain (e.g. a hot cluster larger than
+        #                    its list): pressure below the floor is
+        #                    irreducible, so maintenance_due ignores it
+        #                    instead of re-triggering a futile rebuild
+        n_shards = mesh.size if (cfg.shard_db and mesh is not None) else 1
+        self._n_shards = n_shards
+        self._rebuild_locks = [threading.Lock() for _ in range(n_shards)]
+        self._delta_logs: List[Optional[List[ivf.DeltaOp]]] = [None] * n_shards
+        self._delta_overflow = [False] * n_shards
+        self._shard_versions = [0] * n_shards
+        self._shard_pressure = [{"tombstones": 0, "spilled": 0}
+                                for _ in range(n_shards)]
+        self._spill_floors = [0] * n_shards
         if self.sharded:
             from repro.core import distributed as dce
             self._state = dce.empty_dist_state(cfg, mesh, spill_capacity)
@@ -105,6 +128,17 @@ class Collection:
     @property
     def sharded(self) -> bool:
         return self.cfg.shard_db and self.mesh is not None
+
+    @property
+    def n_shards(self) -> int:
+        """Mesh size for sharded collections, else 1."""
+        return self._n_shards
+
+    @property
+    def _spill_floor(self) -> int:
+        """Aggregate irreducible spill across shards (see `_spill_floors`)."""
+        with self._lock:
+            return sum(self._spill_floors)
 
     # ------------------------------------------------------------------
     # Versioned state snapshot
@@ -128,11 +162,28 @@ class Collection:
         with self._lock:
             return self._version
 
-    def _swap(self, state: ivf.IVFState, **counter_deltas) -> int:
-        """Atomically publish a new state; returns the new version."""
+    def shard_versions(self) -> List[int]:
+        """Per-shard version counters (length `n_shards`).
+
+        A shard-local rebuild bumps only its own shard's entry; writes that
+        touch every shard (build / insert / delete) bump all of them.  Lets
+        tests and callers assert that maintenance of shard i left siblings'
+        state untouched.
+        """
+        with self._lock:
+            return list(self._shard_versions)
+
+    def _swap(self, state: ivf.IVFState, shards: Optional[Tuple[int, ...]] = None,
+              **counter_deltas) -> int:
+        """Atomically publish a new state; returns the new version.
+
+        `shards` limits which per-shard version counters bump (None = all —
+        correct for whole-state writes like build/insert/delete)."""
         with self._lock:
             self._state = state
             self._version += 1
+            for s in (range(self._n_shards) if shards is None else shards):
+                self._shard_versions[s] += 1
             for key, d in counter_deltas.items():
                 self.counters[key] += d
             return self._version
@@ -160,21 +211,60 @@ class Collection:
                 self.counters[key] += d
 
     def _log_delta(self, kind: str, rows, ids) -> None:
-        """Record a write for an in-flight rebuild.  Caller holds
-        `_writer_lock`, so log order == state application order."""
+        """Record a write for every shard with an in-flight rebuild.  Caller
+        holds `_writer_lock`, so log order == state application order.
+
+        Inserts are logged as the *shard-local* row slice: `dist_insert`
+        routes batch rows block-wise over the mesh (shard s gets rows
+        [s*B/S, (s+1)*B/S)), so replay onto a rebuilt shard re-applies
+        exactly the rows that landed there.  Deletes are logged whole —
+        replay tombstones whatever of the id list lives on the shard.
+
+        The row slicing happens OUTSIDE `_lock`: queries contend on that
+        pointer lock, and dispatching device slices under it would tax
+        query latency exactly while a rebuild is in flight.  Safe because
+        the writer lock (held by our caller) is what installs/retires the
+        per-shard logs — the active set cannot change mid-call.
+        """
         with self._lock:
-            if self._delta_log is None:
-                return
-            if len(self._delta_log) >= self.delta_log_capacity:
-                self._delta_overflow = True
+            active = [s for s, log in enumerate(self._delta_logs)
+                      if log is not None]
+        if not active:
+            return
+        entries = {}
+        for s in active:
+            if kind == "insert" and self._n_shards > 1:
+                b = rows.shape[0] // self._n_shards
+                entries[s] = ivf.DeltaOp("insert", rows[s * b:(s + 1) * b],
+                                         ids[s * b:(s + 1) * b])
             else:
-                self._delta_log.append(ivf.DeltaOp(kind, rows, ids))
+                entries[s] = ivf.DeltaOp(kind, rows, ids)
+        with self._lock:
+            for s, op in entries.items():
+                log = self._delta_logs[s]
+                if log is None:
+                    continue
+                if len(log) >= self.delta_log_capacity:
+                    self._delta_overflow[s] = True
+                else:
+                    log.append(op)
 
     # ------------------------------------------------------------------
     # Raw ops (paper templates); the service routes these via the scheduler.
     # ------------------------------------------------------------------
+    def _check_shardable(self, kind: str, n: int) -> None:
+        """Sharded build/insert route rows block-wise over the mesh, which
+        needs the batch to divide evenly; fail with an actionable message
+        instead of shard_map's shape error."""
+        if self.sharded and n % self._n_shards:
+            raise ValueError(
+                f"collection {self.name!r}: {kind} batch of {n} rows does "
+                f"not divide over the {self._n_shards}-shard mesh; pad the "
+                f"batch to a multiple of {self._n_shards}")
+
     def build(self, vectors, ids=None) -> dict:
-        """Bulk build (paper 'index template').
+        """Bulk build (paper 'index template').  Blocks until the index is
+        live (device compute synced before return).
 
         Runs under the writer lock: a build replaces the whole index, so it
         must not interleave with inserts/deletes (the pre-versioned code
@@ -182,52 +272,64 @@ class Collection:
         race rebuild had).  Queries keep reading the old snapshot throughout.
         """
         x = jnp.asarray(vectors, jnp.float32)
+        self._check_shardable("build", int(x.shape[0]))
         ids = self._ids_for(x.shape[0], ids)
         t0 = time.perf_counter()
         with self._writer_lock:
             if self.sharded:
                 from repro.core import distributed as dce
-                state, spilled = dce.dist_build(
+                state, spilled_shards = dce.dist_build(
                     self._split(), x, ids, self.cfg, self.mesh,
                     spill_capacity_per_shard=self.spill_capacity)
-                spilled = jnp.sum(spilled)
+                jax.block_until_ready(state.lists)
+                per_shard = [int(v) for v in
+                             np.asarray(jax.device_get(spilled_shards))]
             else:
                 state, spilled = ivf.build(self._split(), x, ids, self.cfg,
                                            spill_capacity=self.spill_capacity)
-            jax.block_until_ready(state.lists)
-            spilled = int(spilled)
+                jax.block_until_ready(state.lists)
+                per_shard = [int(spilled)]
+            spilled = sum(per_shard)
             with self._lock:
                 self._built = True
                 self._epoch += 1           # obsoletes in-flight rebuild snapshots
-                self._pressure = {"tombstones": 0, "spilled": spilled}
-                self._spill_floor = spilled
+                self._shard_pressure = [{"tombstones": 0, "spilled": sp}
+                                        for sp in per_shard]
+                self._spill_floors = list(per_shard)
             self._swap(state, rebuilds=1, spilled=spilled)
         return {"build_s": time.perf_counter() - t0, "spilled": spilled}
 
     def insert(self, vectors, ids=None) -> int:
-        """Insert rows (paper 'update template'). Returns #spilled.
+        """Insert rows (paper 'update template').  Returns #spilled.
+        Blocks until the rows are queryable (compute synced, then swapped).
 
         Device compute runs under the writer lock only — concurrent queries
-        keep reading the previous snapshot and are never blocked.
+        keep reading the previous snapshot and are never blocked.  Uses the
+        copying (`insert_shared`) kernel, never the donating one: queries on
+        other threads may still hold the current snapshot, and donation
+        would invalidate the buffers under them.  On a sharded collection
+        rows route block-wise over the mesh (batch must divide evenly).
         """
         assert self._built, f"build() collection {self.name!r} before inserting"
         x = jnp.asarray(vectors, jnp.float32)
+        self._check_shardable("insert", int(x.shape[0]))
         ids = self._ids_for(x.shape[0], ids)
         with self._writer_lock:
             if self.sharded:
                 from repro.core import distributed as dce
-                state, spilled = dce.dist_insert(self._state, x, ids,
-                                                 self.cfg, self.mesh)
-                spilled = jnp.sum(spilled)
+                state, spilled_shards = dce.dist_insert(self._state, x, ids,
+                                                        self.cfg, self.mesh)
+                # sync: compute done before publish
+                per_shard = [int(v) for v in
+                             np.asarray(jax.device_get(spilled_shards))]
             else:
-                # insert_shared (copying), NOT the donating insert: queries
-                # on other worker threads may still hold a snapshot of the
-                # current state, and donation would invalidate its buffers
                 state, spilled = ivf.insert_shared(self._state, x, ids,
                                                    self.cfg)
-            spilled = int(spilled)         # sync: compute done before publish
+                per_shard = [int(spilled)]
+            spilled = sum(per_shard)
             with self._lock:
-                self._pressure["spilled"] += spilled
+                for s, sp in enumerate(per_shard):
+                    self._shard_pressure[s]["spilled"] += sp
             self._swap(state, inserts=int(x.shape[0]), spilled=spilled)
             self._log_delta("insert", x, ids)
         return spilled
@@ -235,15 +337,26 @@ class Collection:
     def delete(self, ids) -> int:
         """Tombstone `ids`; returns the number of slots actually tombstoned
         (ids not present contribute nothing — the maintenance triggers that
-        consume the counters see true pressure, not requested counts)."""
-        if self.sharded:
-            raise NotImplementedError("delete on a sharded collection")
+        consume the counters see true pressure, not requested counts).
+        Blocks until the tombstones are visible to new queries.
+
+        On a sharded collection tombstoning runs shard-locally (each shard
+        masks its own slots, no collectives) and the per-shard hit counts
+        feed per-shard maintenance pressure."""
         ids = jnp.asarray(np.atleast_1d(np.asarray(ids)), jnp.int32)
         with self._writer_lock:
-            state, n_hit = ivf.delete_shared(self._state, ids)
-            n_hit = int(n_hit)             # sync: compute done before publish
+            if self.sharded:
+                from repro.core import distributed as dce
+                state, hits = dce.dist_delete(self._state, ids, self.mesh)
+                # sync: compute done before publish
+                per_shard = [int(v) for v in np.asarray(jax.device_get(hits))]
+            else:
+                state, n_hit = ivf.delete_shared(self._state, ids)
+                per_shard = [int(n_hit)]
+            n_hit = sum(per_shard)
             with self._lock:
-                self._pressure["tombstones"] += n_hit
+                for s, n in enumerate(per_shard):
+                    self._shard_pressure[s]["tombstones"] += n
             self._swap(state, deletes=n_hit)
             self._log_delta("delete", None, ids)
         return n_hit
@@ -252,7 +365,12 @@ class Collection:
               nprobe: Optional[int] = None,
               path: Optional[str] = None) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (ids i32[B, k], scores f32[B, k]).  Template-routed;
-        `path` ("probed" | "full_scan") overrides the router (benchmarks)."""
+        `path` ("probed" | "full_scan") overrides the router (benchmarks).
+
+        Wait-free w.r.t. writers: reads the current snapshot under the tiny
+        pointer lock and never takes the writer lock — a stalled insert or
+        in-flight rebuild cannot add to query latency.  Blocks only for its
+        own device compute (result is synced to host)."""
         q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         k, nprobe, path = self.resolve_query(q.shape[0], k, nprobe, path)
         with self._lock:
@@ -267,22 +385,54 @@ class Collection:
             ids, scores = ivf.query_probed(state, q, self.cfg, k, nprobe)
         return np.asarray(ids), np.asarray(scores)
 
-    def rebuild(self, *, max_restarts: int = 2) -> dict:
+    def rebuild(self, shard: Optional[int] = None, *,
+                max_restarts: int = 2) -> dict:
         """Reclaim tombstones + drain spill (paper 'index template') without
-        losing concurrent writes.
+        losing concurrent writes.  Blocks until the rebuilt state is live.
 
         Snapshot -> recompute off-lock (writers log their ops to the bounded
-        delta log) -> reacquire the writer lock -> replay the delta onto the
-        rebuilt state -> swap.  On delta-log overflow the rebuild restarts
-        from a fresh snapshot; the final attempt holds the writer lock for
-        the whole recompute (writers wait, queries don't).  If a bulk
-        `build()` lands mid-rebuild the snapshot is obsolete and the rebuild
-        aborts — the build's state wins.
+        per-shard delta log) -> reacquire the writer lock -> replay the
+        delta onto the rebuilt state -> swap.  On delta-log overflow the
+        rebuild restarts from a fresh snapshot; the final attempt holds the
+        writer lock for the whole recompute (writers wait, queries don't).
+        If a bulk `build()` lands mid-rebuild the snapshot is obsolete and
+        the rebuild aborts — the build's state wins.
+
+        On a sharded collection `shard` selects ONE shard to compact
+        shard-locally (reassign its live rows against the replicated
+        centroids, repack, drain its spill); sibling shards' slices and
+        versions are untouched, so hot shards are maintained independently.
+        `shard=None` sweeps every shard in turn.  On an unsharded collection
+        `shard` must be None or 0 (the index is its own single shard) and
+        the rebuild is the full re-cluster (`ivf.rebuild`).
         """
-        if self.sharded:
-            raise NotImplementedError("rebuild on a sharded collection")
+        if not self.sharded:
+            if shard not in (None, 0):
+                raise ValueError(
+                    f"collection {self.name!r} is unsharded; rebuild(shard="
+                    f"{shard}) is only meaningful with shard_db=True")
+            return self._rebuild_single(max_restarts)
+        if shard is None:
+            out = {"rebuild_s": 0.0, "spilled": 0, "replayed": 0,
+                   "restarts": 0, "aborted": False, "shards": []}
+            for s in range(self._n_shards):
+                r = self._rebuild_shard(s, max_restarts)
+                out["rebuild_s"] += r["rebuild_s"]
+                out["spilled"] += r["spilled"]
+                out["replayed"] += r["replayed"]
+                out["restarts"] += r["restarts"]
+                out["aborted"] = out["aborted"] or r["aborted"]
+                out["shards"].append(s)
+            return out
+        if not 0 <= shard < self._n_shards:
+            raise ValueError(f"collection {self.name!r} has shards "
+                             f"0..{self._n_shards - 1}; got shard={shard}")
+        return self._rebuild_shard(shard, max_restarts)
+
+    def _rebuild_single(self, max_restarts: int) -> dict:
+        """Unsharded delta-replay rebuild (full re-cluster)."""
         t0 = time.perf_counter()
-        with self._rebuild_lock:
+        with self._rebuild_locks[0]:
             restarts = 0
             while True:
                 exclusive = restarts >= max_restarts
@@ -291,8 +441,8 @@ class Collection:
                 epoch = self._epoch
                 if not exclusive:
                     with self._lock:
-                        self._delta_log = []
-                        self._delta_overflow = False
+                        self._delta_logs[0] = []
+                        self._delta_overflow[0] = False
                     self._writer_lock.release()
                 try:
                     new, spilled = ivf.rebuild(self._split(), snap, self.cfg)
@@ -304,8 +454,8 @@ class Collection:
                         self._writer_lock.acquire()
                     try:
                         with self._lock:
-                            self._delta_log = None
-                            self._delta_overflow = False
+                            self._delta_logs[0] = None
+                            self._delta_overflow[0] = False
                     finally:
                         self._writer_lock.release()
                     raise
@@ -313,10 +463,10 @@ class Collection:
                     self._writer_lock.acquire()
                 try:
                     with self._lock:
-                        log = self._delta_log or []
-                        overflow = self._delta_overflow
-                        self._delta_log = None
-                        self._delta_overflow = False
+                        log = self._delta_logs[0] or []
+                        overflow = self._delta_overflow[0]
+                        self._delta_logs[0] = None
+                        self._delta_overflow[0] = False
                     if self._epoch != epoch:
                         # a bulk build replaced the index mid-rebuild; our
                         # snapshot (and its tombstones) no longer exist
@@ -339,9 +489,9 @@ class Collection:
                     # replay spill was never tested against a re-cluster, so
                     # it stays live pressure for the next rebuild to try.
                     with self._lock:
-                        self._pressure = {"tombstones": tombstoned,
-                                          "spilled": spilled + extra}
-                        self._spill_floor = spilled
+                        self._shard_pressure[0] = {"tombstones": tombstoned,
+                                                   "spilled": spilled + extra}
+                        self._spill_floors[0] = spilled
                     spilled += extra
                     self._swap(new, rebuilds=1)
                     return {"rebuild_s": time.perf_counter() - t0,
@@ -350,35 +500,138 @@ class Collection:
                 finally:
                     self._writer_lock.release()
 
+    def _rebuild_shard(self, shard: int, max_restarts: int) -> dict:
+        """Shard-local delta-replay rebuild of one mesh shard.
+
+        Same protocol as `_rebuild_single` with two twists: the recompute is
+        `dist_rebuild` (compaction of shard `shard` only — siblings pass
+        through), and the publish step first *adopts* the rebuilt shard into
+        the CURRENT live state (`dist_adopt_shard`) so sibling-shard writes
+        that landed during the off-lock recompute are preserved without
+        replay — only this shard's logged ops are replayed onto it.
+        """
+        from repro.core import distributed as dce
+        t0 = time.perf_counter()
+        with self._rebuild_locks[shard]:
+            restarts = 0
+            while True:
+                exclusive = restarts >= max_restarts
+                self._writer_lock.acquire()
+                snap = self._state
+                epoch = self._epoch
+                if not exclusive:
+                    with self._lock:
+                        self._delta_logs[shard] = []
+                        self._delta_overflow[shard] = False
+                    self._writer_lock.release()
+                try:
+                    rebuilt, sp = dce.dist_rebuild(snap, self.cfg, self.mesh,
+                                                   shard=shard)
+                    jax.block_until_ready(rebuilt.lists)
+                    spilled = int(np.asarray(jax.device_get(sp))[shard])
+                except BaseException:
+                    if not exclusive:
+                        self._writer_lock.acquire()
+                    try:
+                        with self._lock:
+                            self._delta_logs[shard] = None
+                            self._delta_overflow[shard] = False
+                    finally:
+                        self._writer_lock.release()
+                    raise
+                if not exclusive:
+                    self._writer_lock.acquire()
+                try:
+                    with self._lock:
+                        log = self._delta_logs[shard] or []
+                        overflow = self._delta_overflow[shard]
+                        self._delta_logs[shard] = None
+                        self._delta_overflow[shard] = False
+                    if self._epoch != epoch:
+                        return {"rebuild_s": time.perf_counter() - t0,
+                                "spilled": 0, "replayed": 0,
+                                "restarts": restarts, "aborted": True,
+                                "shard": shard}
+                    if overflow:
+                        restarts += 1
+                        continue
+                    # siblings keep their LIVE slices (concurrent writes
+                    # already applied there); only this shard swaps in the
+                    # rebuilt slice and replays its log
+                    merged = dce.dist_adopt_shard(self._state, rebuilt,
+                                                  shard, self.mesh)
+                    replayed = sum(int(op.ids.shape[0]) for op in log)
+                    extra = tombstoned = 0
+                    if log:
+                        merged, extra, tombstoned = dce.dist_replay(
+                            merged, log, shard, self.cfg, self.mesh)
+                    jax.block_until_ready(merged.lists)
+                    with self._lock:
+                        self._shard_pressure[shard] = {
+                            "tombstones": tombstoned,
+                            "spilled": spilled + extra}
+                        self._spill_floors[shard] = spilled
+                    spilled += extra
+                    self._swap(merged, shards=(shard,), rebuilds=1)
+                    return {"rebuild_s": time.perf_counter() - t0,
+                            "spilled": spilled, "replayed": replayed,
+                            "restarts": restarts, "aborted": False,
+                            "shard": shard}
+                finally:
+                    self._writer_lock.release()
+
     # ------------------------------------------------------------------
     # Maintenance pressure (consumed by the service's MaintenanceController)
     # ------------------------------------------------------------------
     def maintenance_pressure(self) -> dict:
-        """Host-side pressure since the last (re)build — poll-cheap."""
+        """Host-side pressure since the last (re)build — poll-cheap.
+
+        Aggregate counters plus a per-shard breakdown under ``"shards"``
+        (the controller schedules shard-local rebuilds from the latter).
+        """
         with self._lock:
-            p = dict(self._pressure)
-            p["delta_backlog"] = (len(self._delta_log)
-                                  if self._delta_log is not None else 0)
+            shards = [dict(p) for p in self._shard_pressure]
+            for s, log in enumerate(self._delta_logs):
+                shards[s]["delta_backlog"] = len(log) if log is not None else 0
+        p = {"tombstones": sum(s["tombstones"] for s in shards),
+             "spilled": sum(s["spilled"] for s in shards),
+             "delta_backlog": max(s["delta_backlog"] for s in shards),
+             "shards": shards}
         return p
 
-    def maintenance_due(self) -> bool:
-        """True when tombstone/spill pressure crosses the collection's
-        thresholds and a background rebuild would pay for itself."""
-        if not self._built or self.sharded:
-            return False
-        t = self.thresholds
+    def _maintenance_limits(self) -> Tuple[int, int]:
+        """Per-shard (tombstone, spill) rebuild trigger limits.
+
+        Each shard owns `cfg.capacity` list slots and `spill_capacity` spill
+        slots (the global sharded arrays are S stacked copies of that), so
+        the same fractions apply per shard in both tiers.  The shard-local
+        pending floor (`maintenance_shard_min_pending`) only applies when
+        the collection is actually sharded — an unsharded collection's
+        single shard sees the full traffic and keeps the aggregate floor."""
+        return self.thresholds.maintenance_limits(self.cfg.capacity,
+                                                  self.spill_capacity,
+                                                  per_shard=self.sharded)
+
+    def maintenance_due_shards(self) -> List[int]:
+        """Shard ids whose tombstone/spill pressure crosses the collection's
+        thresholds — each is worth an independent shard-local rebuild.
+        Unsharded collections report `[0]` when due (the single shard)."""
+        if not self._built:
+            return []
+        tomb_limit, spill_limit = self._maintenance_limits()
         with self._lock:
-            p = dict(self._pressure)
-            spill_floor = self._spill_floor
-        pending = t.maintenance_min_pending
-        tomb_limit = max(pending,
-                         int(t.maintenance_tombstone_frac * self.cfg.capacity))
-        spill_limit = max(pending,
-                          int(t.maintenance_spill_frac * self.spill_capacity))
+            press = [dict(p) for p in self._shard_pressure]
+            floors = list(self._spill_floors)
         # only spill above the irreducible floor counts — residual spill the
         # last rebuild failed to place must not re-trigger it forever
-        return (p["tombstones"] >= tomb_limit
-                or p["spilled"] - spill_floor >= spill_limit)
+        return [s for s in range(self._n_shards)
+                if press[s]["tombstones"] >= tomb_limit
+                or press[s]["spilled"] - floors[s] >= spill_limit]
+
+    def maintenance_due(self) -> bool:
+        """True when any shard's pressure crosses the thresholds and a
+        background (shard-local) rebuild would pay for itself."""
+        return bool(self.maintenance_due_shards())
 
     # ------------------------------------------------------------------
     def resolve_query(self, batch: int, k, nprobe, path) -> Tuple[int, int, str]:
@@ -403,61 +656,127 @@ class Collection:
         return (self.cfg, self.spill_capacity, self.sharded, k, nprobe, path)
 
     def stats(self) -> dict:
+        """Counters + index occupancy snapshot.  Syncs device scalars (live/
+        spill/deleted counts) — cheap but not free; poll `maintenance_
+        pressure()` instead on hot paths."""
         with self._lock:
             state = self._state
             counters = dict(self.counters)
             version = self._version
-            pressure = dict(self._pressure)
+            shard_versions = list(self._shard_versions)
+            pressure = [dict(p) for p in self._shard_pressure]
         if self.sharded:
             s = {"n_clusters": state.n_clusters, "dim": state.dim,
                  "list_capacity": state.list_capacity,
                  "live": int(jax.device_get(ivf.live_count(state))),
                  "spill": int(np.sum(jax.device_get(state.spill_size))),
-                 "deleted": int(np.sum(jax.device_get(state.num_deleted)))}
+                 "deleted": int(np.sum(jax.device_get(state.num_deleted))),
+                 "shards": self._n_shards,
+                 "shard_versions": shard_versions}
         else:
             s = ivf.stats(state)
         s.update(counters)
         s["version"] = version
-        s["pressure"] = pressure
+        s["pressure"] = {"tombstones": sum(p["tombstones"] for p in pressure),
+                         "spilled": sum(p["spilled"] for p in pressure),
+                         "shards": pressure}
         return s
 
     # ------------------------------------------------------------------
     # Persistence — one namespace directory per collection.
     # ------------------------------------------------------------------
     def save_into(self, directory: str, step: int = 0) -> None:
+        """Write this collection's namespace directory.
+
+        Unsharded: one Checkpointer step dir + `collection.json`.  Sharded:
+        one `shard_<i>/` Checkpointer namespace per shard (each holds that
+        shard's local `IVFState`) plus the mesh axis names/shape in the
+        metadata so `load_from` can verify — or host-reshard — the layout.
+        Reads a consistent snapshot; safe to call under live traffic.
+        """
         from repro.checkpoint.checkpointer import Checkpointer
-        if self.sharded:
-            # restoring would need the mesh + resharding on load; fail at
-            # save time rather than producing an unloadable snapshot
-            raise NotImplementedError(
-                f"collection {self.name!r}: persistence of sharded "
-                "collections is not supported yet")
         os.makedirs(directory, exist_ok=True)
-        ck = Checkpointer(directory)
         with self._lock:
             state = self._state
             meta = {"name": self.name, "next_id": self._next_id,
                     "counters": dict(self.counters), "built": self._built,
                     "spill_capacity": self.spill_capacity, "step": step,
-                    "spill_floor": self._spill_floor}
-        ck.save(step, state._asdict())
+                    "spill_floors": list(self._spill_floors)}
+        if self.sharded:
+            from repro.core import distributed as dce
+            meta["sharded"] = True
+            meta["mesh_axes"] = list(self.mesh.axis_names)
+            meta["mesh_shape"] = [int(self.mesh.shape[a])
+                                  for a in self.mesh.axis_names]
+            for i, local in enumerate(dce.split_host(state, self._n_shards)):
+                Checkpointer(os.path.join(directory, f"shard_{i:03d}")).save(
+                    step, local._asdict())
+        else:
+            Checkpointer(directory).save(step, state._asdict())
         atomic_write_json(os.path.join(directory, META_FILE), meta)
 
     @classmethod
     def load_from(cls, directory: str, name: str, cfg: EngineConfig, *,
-                  step: Optional[int] = None, **kw) -> "Collection":
+                  step: Optional[int] = None, reshard: bool = False,
+                  **kw) -> "Collection":
+        """Restore a collection from its namespace directory.
+
+        Sharded snapshots need ``cfg.shard_db=True`` and a ``mesh=`` kwarg.
+        If the mesh shape differs from the one the snapshot was saved on,
+        the default is to fail fast; pass ``reshard=True`` to re-pack the
+        saved rows host-side onto the new mesh (deterministic against the
+        saved centroids; see `repro.core.distributed.reshard_host`).
+        """
         from repro.checkpoint.checkpointer import Checkpointer
         mpath = os.path.join(directory, META_FILE)
         meta = {}
         if os.path.exists(mpath):
             with open(mpath) as f:
                 meta = json.load(f)
-        coll = cls(name, cfg,
-                   spill_capacity=int(meta.get("spill_capacity", 4096)), **kw)
-        ck = Checkpointer(directory)
-        restored = ck.restore(coll.state._asdict(), step=step)
-        coll.state = ivf.IVFState(**{k: jnp.asarray(v)
-                                     for k, v in restored.items()})
+        spill_capacity = int(meta.get("spill_capacity", 4096))
+        coll = cls(name, cfg, spill_capacity=spill_capacity, **kw)
+        if bool(meta.get("sharded", False)) != coll.sharded:
+            saved = "sharded" if meta.get("sharded") else "unsharded"
+            raise ValueError(
+                f"collection {name!r} was saved {saved} (mesh "
+                f"{meta.get('mesh_shape')}); load it with a matching "
+                "EngineConfig.shard_db and, when sharded, a mesh= kwarg")
+        if coll.sharded:
+            from repro.core import distributed as dce
+            saved_shape = [int(v) for v in meta["mesh_shape"]]
+            cur_shape = [int(coll.mesh.shape[a])
+                         for a in coll.mesh.axis_names]
+            n_saved = int(np.prod(saved_shape))
+            shards = []
+            template = ivf.empty_state(cfg, spill_capacity)._asdict()
+            for i in range(n_saved):
+                ck = Checkpointer(os.path.join(directory, f"shard_{i:03d}"))
+                shards.append(ivf.IVFState(**ck.restore(template, step=step)))
+            if cur_shape == saved_shape:
+                coll.state = dce.assemble_host(shards)
+                floors = meta.get("spill_floors", [0] * n_saved)
+            elif reshard:
+                shards = dce.reshard_host(shards, cfg, coll.mesh.size,
+                                          spill_capacity)
+                coll.state = dce.assemble_host(shards)
+                # re-packed layout: old per-shard floors are meaningless;
+                # the next rebuild per shard re-establishes them
+                floors = [0] * coll.mesh.size
+            else:
+                raise ValueError(
+                    f"collection {name!r} was saved on mesh "
+                    f"{dict(zip(meta['mesh_axes'], saved_shape))} but is "
+                    f"being loaded on mesh shape {cur_shape}; pass "
+                    "reshard=True to re-pack the rows host-side onto the "
+                    "new mesh")
+        else:
+            restored = Checkpointer(directory).restore(
+                coll.state._asdict(), step=step)
+            coll.state = ivf.IVFState(**{k: jnp.asarray(v)
+                                         for k, v in restored.items()})
+            floors = meta.get("spill_floors")
+            if floors is None:   # pre-sharding snapshots: scalar field
+                floors = [int(meta.get("spill_floor", 0))]
         # keep the never-built guard across a save/load round-trip (older
         # snapshots without the flag were only saved after a build)
         coll._built = bool(meta.get("built", True))
@@ -468,9 +787,11 @@ class Collection:
         # floor survives the round-trip so known-irreducible spill doesn't
         # auto-trigger a futile rebuild on every restart
         st = coll.state
-        coll._pressure = {
-            "tombstones": int(jax.device_get(st.num_deleted)),
-            "spilled": int(jax.device_get(st.spill_size)),
-        }
-        coll._spill_floor = int(meta.get("spill_floor", 0))
+        deleted = np.atleast_1d(np.asarray(jax.device_get(st.num_deleted)))
+        spill = np.atleast_1d(np.asarray(jax.device_get(st.spill_size)))
+        coll._shard_pressure = [{"tombstones": int(deleted[s]),
+                                 "spilled": int(spill[s])}
+                                for s in range(coll._n_shards)]
+        coll._spill_floors = [int(f) for f in floors][:coll._n_shards]
+        coll._spill_floors += [0] * (coll._n_shards - len(coll._spill_floors))
         return coll

@@ -32,6 +32,8 @@ class MemoryOp:
              background lane, the paper's query-update hybrid template).
     batch:   queries only — park the op in the service's pending window so
              it can fuse with same-signature queries from other collections.
+    shard:   rebuild only — compact just this mesh shard of a sharded
+             collection (shard-local maintenance); None rebuilds them all.
     """
 
     kind: str
@@ -43,6 +45,7 @@ class MemoryOp:
     path: Optional[str] = None
     concurrent: bool = False
     batch: bool = False
+    shard: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in OP_KINDS:
@@ -50,6 +53,8 @@ class MemoryOp:
                              f"expected one of {OP_KINDS}")
         if self.batch and self.kind != "query":
             raise ValueError("batch=True is only meaningful for queries")
+        if self.shard is not None and self.kind != "rebuild":
+            raise ValueError("shard= is only meaningful for rebuild ops")
 
     @property
     def batch_size(self) -> int:
@@ -64,7 +69,15 @@ class MemoryOp:
 
 @dataclass
 class OpFuture:
-    """Result handle for a submitted MemoryOp."""
+    """Result handle for a submitted MemoryOp.
+
+    Thread-safety: safe to share across threads.  `done()` never blocks;
+    `wait()` / `result()` / `exception()` block the *calling* thread until a
+    scheduler worker (or the batch demultiplexer) settles the future —
+    device compute itself always runs on the worker, never on the waiter.
+    Waiting on a batch-parked query first flushes the service's pending
+    window, so `result()` can never hang on an op nobody dispatched.
+    `result()` re-raises the op's error in the caller's thread."""
 
     op: MemoryOp
     _event: threading.Event = field(default_factory=threading.Event)

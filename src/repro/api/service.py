@@ -52,13 +52,16 @@ _NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
 class MaintenanceController:
     """Workload-triggered background maintenance for a `MemoryService`.
 
-    A daemon thread polls every collection's `maintenance_due()` (pure host
-    counters — no device sync) and schedules at most one in-flight rebuild
-    per collection through the service's scheduler, on the background
-    backend class the rebuild template routes to.  Queries are isolated
-    from the rebuild both by the scheduler (latency workers never take
-    index work) and by the collection (delta-replay rebuilds never hold the
-    state lock through device compute).
+    A daemon thread polls every collection's `maintenance_due_shards()`
+    (pure host counters — no device sync) and schedules at most one
+    in-flight rebuild per (collection, shard) through the service's
+    scheduler, on the background backend class the rebuild template routes
+    to.  On a mesh-sharded collection each due shard gets its own
+    shard-local rebuild op — one hot shard's maintenance never waits on (or
+    stalls) its siblings'.  Queries are isolated from the rebuild both by
+    the scheduler (latency workers never take index work) and by the
+    collection (delta-replay rebuilds never hold the state lock through
+    device compute).
     """
 
     def __init__(self, service: "MemoryService", *,
@@ -69,9 +72,10 @@ class MaintenanceController:
         self.failure_backoff_s = failure_backoff_s
         self._stop = threading.Event()
         self._lock = threading.Lock()
-        self._inflight: Dict[str, OpFuture] = {}
+        # keyed by (collection, shard); shard is None for unsharded tenants
+        self._inflight: Dict[Tuple[str, Optional[int]], OpFuture] = {}
         # persistent rebuild failures must not re-submit every poll
-        self._backoff_until: Dict[str, float] = {}
+        self._backoff_until: Dict[Tuple[str, Optional[int]], float] = {}
         self.triggered = 0
         self.failed = 0
         self.last_error: Optional[BaseException] = None
@@ -92,64 +96,87 @@ class MaintenanceController:
         """One maintenance sweep; returns the number of rebuilds scheduled.
         (Also callable directly — tests and cron-style drivers; safe to race
         with the daemon poll: the slot is reserved under the lock before the
-        submit, so a collection never gets two concurrent rebuilds.)"""
+        submit, so a (collection, shard) never gets two concurrent
+        rebuilds.)"""
         n = 0
         for name in self._service.list_collections():
-            with self._lock:
-                if name in self._inflight:
-                    fut = self._inflight[name]
-                    # None = another poller reserved the slot mid-submit
-                    if fut is None or not fut.done():
-                        continue          # one in-flight rebuild per tenant
-                    self._inflight.pop(name)
-                    if fut._error is not None:
-                        self.failed += 1
-                        self.last_error = fut._error
-                        self._backoff_until[name] = (
-                            time.monotonic() + self.failure_backoff_s)
-                if time.monotonic() < self._backoff_until.get(name, 0.0):
-                    continue              # failing rebuild: wait out backoff
             try:
                 coll = self._service.collection(name)
             except KeyError:
                 continue                  # dropped between list and poll
-            if not coll.maintenance_due():
-                continue
-            with self._lock:
-                if name in self._inflight:
-                    continue              # concurrent poller beat us to it
-                self._inflight[name] = None
-            try:
-                fut = self._service.submit(MemoryOp("rebuild", name))
-            except BaseException as e:    # noqa: BLE001 — release the slot
+            due = coll.maintenance_due_shards()
+            for shard in due:
+                key = (name, shard if coll.sharded else None)
                 with self._lock:
-                    self._inflight.pop(name, None)
-                    if not isinstance(e, KeyError):
-                        self.failed += 1
-                        self.last_error = e
-                        self._backoff_until[name] = (
-                            time.monotonic() + self.failure_backoff_s)
-                continue
-            with self._lock:
-                self._inflight[name] = fut
-                self.triggered += 1
-            n += 1
+                    if key in self._inflight:
+                        fut = self._inflight[key]
+                        # None = another poller reserved the slot mid-submit
+                        if fut is None or not fut.done():
+                            continue      # one in-flight rebuild per slot
+                        self._inflight.pop(key)
+                        if fut._error is not None:
+                            self.failed += 1
+                            self.last_error = fut._error
+                            self._backoff_until[key] = (
+                                time.monotonic() + self.failure_backoff_s)
+                    if time.monotonic() < self._backoff_until.get(key, 0.0):
+                        continue          # failing rebuild: wait out backoff
+                    self._inflight[key] = None
+                try:
+                    fut = self._service.submit(
+                        MemoryOp("rebuild", name, shard=key[1]))
+                except BaseException as e:  # noqa: BLE001 — release the slot
+                    with self._lock:
+                        self._inflight.pop(key, None)
+                        if not isinstance(e, KeyError):
+                            self.failed += 1
+                            self.last_error = e
+                            self._backoff_until[key] = (
+                                time.monotonic() + self.failure_backoff_s)
+                    continue
+                with self._lock:
+                    self._inflight[key] = fut
+                    self.triggered += 1
+                n += 1
         return n
 
     def stop(self, timeout: float = 5.0) -> None:
         self._stop.set()
         self._thread.join(timeout=timeout)
 
+    @staticmethod
+    def _slot_name(key: Tuple[str, Optional[int]]) -> str:
+        name, shard = key
+        return name if shard is None else f"{name}[shard {shard}]"
+
     def stats(self) -> dict:
         with self._lock:
             return {"triggered": self.triggered, "failed": self.failed,
-                    "inflight": sorted(n for n, f in self._inflight.items()
-                                       if f is None or not f.done()),
+                    "inflight": sorted(
+                        self._slot_name(k) for k, f in self._inflight.items()
+                        if f is None or not f.done()),
                     "last_error": repr(self.last_error)
                                   if self.last_error else None}
 
 
 class MemoryService:
+    """Multi-tenant front door over named `Collection`s (see module doc).
+
+    Thread-safety: every public method is safe to call from any thread.
+    The registry lock only guards the collection dict and pending-batch
+    window; per-collection consistency is the collection's own concern
+    (writer lock + snapshot reads — see `repro.api.collection`).
+
+    Blocking behavior: `submit()` returns an `OpFuture` immediately (it
+    blocks only while the scheduler's submission window is full — the
+    paper's windowed batch submission); the sync conveniences
+    (`build`/`insert`/`delete`/`query`/`rebuild`) are `.result()` wrappers
+    and block until the op lands.  `save()`/`load()` block on checkpoint
+    I/O.  `shutdown()` blocks until the maintenance thread and (owned)
+    scheduler workers exit; the service is also a context manager that
+    shuts down on exit.
+    """
+
     def __init__(self, *, scheduler: Optional[WindowedScheduler] = None,
                  batch_window: int = 8, maintenance: bool = True,
                  maintenance_poll_interval_s: float = 0.05):
@@ -253,7 +280,8 @@ class MemoryService:
 
         nbytes = getattr(op.payload, "nbytes", 0)
         task = Task(fn=fn, kind=op.kind, backend=plan.backend,
-                    priority=plan.priority, size_bytes=int(nbytes))
+                    priority=plan.priority, size_bytes=int(nbytes),
+                    shard=op.shard)
         fut.task = self.scheduler.submit(task)
         return fut
 
@@ -269,7 +297,7 @@ class MemoryService:
             return coll.query(op.payload, k=op.k, nprobe=op.nprobe,
                               path=op.path)
         if op.kind == "rebuild":
-            return coll.rebuild()
+            return coll.rebuild(shard=op.shard)
         raise ValueError(f"unknown op kind {op.kind!r}")
 
     # ------------------------------------------------------------------
@@ -415,8 +443,11 @@ class MemoryService:
         return self.submit(MemoryOp("query", collection, queries, k=k,
                                     nprobe=nprobe, path=path)).result()
 
-    def rebuild(self, collection: str) -> dict:
-        return self.submit(MemoryOp("rebuild", collection)).result()
+    def rebuild(self, collection: str, shard: Optional[int] = None) -> dict:
+        """Rebuild a collection (blocks).  `shard` compacts one mesh shard
+        of a sharded collection shard-locally; None rebuilds everything."""
+        return self.submit(MemoryOp("rebuild", collection,
+                                    shard=shard)).result()
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
@@ -448,19 +479,18 @@ class MemoryService:
     # Persistence — per-collection namespaces under one service directory.
     # ------------------------------------------------------------------
     def save(self, directory: str, step: int = 0) -> None:
+        """Persist every collection (blocks until all namespaces are
+        written).  Sharded collections write one `shard_<i>` namespace per
+        mesh shard; restore them via `load(..., mesh=...)`."""
         with self._lock:
             colls = dict(self._collections)
-        for name, coll in colls.items():   # validate before writing anything
-            if coll.sharded:
-                raise NotImplementedError(
-                    f"collection {name!r} is sharded; persistence of "
-                    "sharded collections is not supported yet")
         os.makedirs(directory, exist_ok=True)
         registry = {}
         for name, coll in colls.items():
             coll.save_into(os.path.join(directory, "collections", name),
                            step=step)
-            registry[name] = {"cfg": dataclasses.asdict(coll.cfg)}
+            registry[name] = {"cfg": dataclasses.asdict(coll.cfg),
+                              "sharded": coll.sharded}
         atomic_write_json(os.path.join(directory, SERVICE_FILE),
                           {"version": 1, "collections": registry})
 
@@ -468,16 +498,29 @@ class MemoryService:
     def load(cls, directory: str, *,
              scheduler: Optional[WindowedScheduler] = None,
              batch_window: int = 8, step: Optional[int] = None,
-             maintenance: bool = True) -> "MemoryService":
+             maintenance: bool = True, mesh=None,
+             reshard: bool = False) -> "MemoryService":
+        """Restore a saved service.  `mesh` is required when the registry
+        holds sharded collections (they restore onto it; pass
+        `reshard=True` to accept a mesh shape different from the one the
+        snapshot was saved on — rows are re-packed host-side)."""
         with open(os.path.join(directory, SERVICE_FILE)) as f:
             registry = json.load(f)
         svc = cls(scheduler=scheduler, batch_window=batch_window,
                   maintenance=maintenance)
         for name, entry in registry["collections"].items():
             cfg = EngineConfig(**entry["cfg"])
+            kw = {}
+            if entry.get("sharded", cfg.shard_db):
+                if mesh is None:
+                    raise ValueError(
+                        f"collection {name!r} in {directory!r} is sharded; "
+                        "pass MemoryService.load(..., mesh=<jax Mesh>) to "
+                        "restore it")
+                kw["mesh"] = mesh
             coll = Collection.load_from(
                 os.path.join(directory, "collections", name), name, cfg,
-                step=step)
+                step=step, reshard=reshard, **kw)
             with svc._lock:
                 svc._collections[name] = coll
         if registry["collections"]:

@@ -9,22 +9,40 @@ Centroids are replicated.  Consequences:
              local top-k, and a tiny all-gather of k candidates per device
              merges globally (the paper's host-side top-k aggregation, made
              hierarchical).
-  * insert — rows are routed round-robin to devices; assignment is local
+  * insert — batch rows are routed block-wise to devices (shard s takes the
+             contiguous block [s*B/S, (s+1)*B/S) — the per-shard delta-log
+             replay relies on exactly this placement); assignment is local
              GEMM (centroids replicated), packing is local.
-  * build/rebuild — distributed k-means: local assign + local one-hot-GEMM
+  * build  — distributed k-means: local assign + local one-hot-GEMM
              partial sums, `psum` over the mesh, identical centroid update
              everywhere.  Collective volume per iteration is O(C*D), not
              O(N*D).
+  * delete — tombstoning is embarrassingly shard-local: every shard masks
+             the requested ids out of its own slots (no collectives).
+  * rebuild / replay — *shard-local maintenance*: a rebuild compacts ONE
+             shard's slice (reassign its live rows against the replicated
+             centroids, repack, drain its spill) while every other shard's
+             arrays pass through untouched, so one hot shard's maintenance
+             never stalls its siblings.  Centroids are deliberately kept
+             fixed: re-clustering locally would break the replication
+             invariant that insert routing and the probed path rely on —
+             a full re-cluster is `dist_build` (the bulk-build template).
+             Delta replay mirrors the single-shard `ivf.DeltaOp`/`replay`
+             protocol, applied to the rebuilt shard only.
 
 Inside `shard_map` every device sees a plain `IVFState`, so the entire
-single-device functional core is reused verbatim.
+single-device functional core is reused verbatim.  The host-side helpers at
+the bottom (`split_host` / `assemble_host` / `reshard_host`) convert between
+the global sharded layout and per-shard local states for persistence.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
@@ -37,6 +55,19 @@ from repro.kernels import ops
 def _shard_axes(mesh: Mesh) -> Tuple[str, ...]:
     """All mesh axes shard the DB (engine rows want every chip)."""
     return tuple(mesh.axis_names)
+
+
+def _shard_index(mesh: Mesh) -> jax.Array:
+    """Linear shard id of the executing device, row-major over mesh axes.
+
+    Matches the block order `P(axes...)` uses when several axes shard one
+    array dimension (first axis is major), so shard `i` here owns slab `i`
+    of every sharded leaf in `state_specs`.
+    """
+    idx = jnp.zeros((), jnp.int32)
+    for name in mesh.axis_names:
+        idx = idx * mesh.shape[name] + jax.lax.axis_index(name)
+    return idx
 
 
 def state_specs(mesh: Mesh) -> ivf.IVFState:
@@ -155,12 +186,14 @@ def dist_build(key, x, ids, cfg: EngineConfig, mesh: Mesh,
 # Distributed query
 # ---------------------------------------------------------------------------
 
-def dist_query(state: ivf.IVFState, q, cfg: EngineConfig, mesh: Mesh, k: int):
-    """Query q f32[B, D] (replicated) -> (ids i32[B,k], scores f32[B,k]).
+# The shard_map-wrapped callables below are memoized per (mesh, cfg, ...):
+# jax keys its trace/compile cache on the wrapped function object, so
+# re-wrapping on every call would re-trace every dispatch — painful on the
+# maintenance path, which replays many small ops while the collection holds
+# its writer lock.  Meshes and EngineConfigs are hashable and few.
 
-    Local fused-scan top-k per shard, then one small all-gather of k
-    candidates per shard and a final top-k — hierarchical merge.
-    """
+@functools.lru_cache(maxsize=None)
+def _query_fn(mesh: Mesh, cfg: EngineConfig, k: int):
     ax = _shard_axes(mesh)
 
     def _query(state_loc, q_loc):
@@ -171,21 +204,29 @@ def dist_query(state: ivf.IVFState, q, cfg: EngineConfig, mesh: Mesh, k: int):
         top, pos = jax.lax.top_k(sc_g, k)
         return jnp.take_along_axis(ids_g, pos, axis=1), top
 
-    fn = shard_map(
+    return shard_map(
         _query, mesh=mesh,
         in_specs=(state_specs(mesh), P()),
         out_specs=(P(), P()),
         check_vma=False,
     )
-    return fn(state, q)
+
+
+def dist_query(state: ivf.IVFState, q, cfg: EngineConfig, mesh: Mesh, k: int):
+    """Query q f32[B, D] (replicated) -> (ids i32[B,k], scores f32[B,k]).
+
+    Local fused-scan top-k per shard, then one small all-gather of k
+    candidates per shard and a final top-k — hierarchical merge.
+    """
+    return _query_fn(mesh, cfg, k)(state, q)
 
 
 # ---------------------------------------------------------------------------
 # Distributed insert
 # ---------------------------------------------------------------------------
 
-def dist_insert(state: ivf.IVFState, x, ids, cfg: EngineConfig, mesh: Mesh):
-    """Insert x f32[B, D] (B sharded round-robin over the mesh)."""
+@functools.lru_cache(maxsize=None)
+def _insert_fn(mesh: Mesh, cfg: EngineConfig):
     ax = _shard_axes(mesh)
 
     def _insert(state_loc, x_loc, ids_loc):
@@ -194,10 +235,297 @@ def dist_insert(state: ivf.IVFState, x, ids, cfg: EngineConfig, mesh: Mesh):
         return _unlocal(st), spilled[None]
 
     specs = state_specs(mesh)
-    fn = shard_map(
+    return shard_map(
         _insert, mesh=mesh,
         in_specs=(specs, P(ax), P(ax)),
         out_specs=(specs, P(ax)),
         check_vma=False,
     )
-    return fn(state, x, ids)
+
+
+def dist_insert(state: ivf.IVFState, x, ids, cfg: EngineConfig, mesh: Mesh):
+    """Insert x f32[B, D]; B must divide by the mesh size — shard s takes
+    the contiguous block [s*B/S, (s+1)*B/S) (the per-shard delta-log replay
+    in `repro.api.collection` relies on this block placement).  Returns
+    (state, spilled i32[S]) with the per-shard spill counts."""
+    return _insert_fn(mesh, cfg)(state, x, ids)
+
+
+# ---------------------------------------------------------------------------
+# Distributed delete (shard-local tombstoning)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _delete_fn(mesh: Mesh):
+    ax = _shard_axes(mesh)
+
+    def _del(state_loc, ids_loc):
+        st = _local(state_loc)
+        st, n = ivf._delete(st, ids_loc)
+        return _unlocal(st), n[None]
+
+    specs = state_specs(mesh)
+    return shard_map(
+        _del, mesh=mesh,
+        in_specs=(specs, P()),
+        out_specs=(specs, P(ax)),
+        check_vma=False,
+    )
+
+
+def dist_delete(state: ivf.IVFState, ids, mesh: Mesh
+                ) -> Tuple[ivf.IVFState, jax.Array]:
+    """Tombstone external `ids` i32[B] (replicated) on every shard.
+
+    Purely shard-local — each device masks the ids out of its own list/spill
+    slots, no collectives.  Returns (state, n_hit i32[S]): the per-shard
+    count of slots actually tombstoned, so callers can account maintenance
+    pressure *per shard* (the whole point of shard-local rebuild scheduling).
+    """
+    return _delete_fn(mesh)(state, ids)
+
+
+# ---------------------------------------------------------------------------
+# Shard-local rebuild (compaction) + delta replay
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _rebuild_fn(mesh: Mesh, cfg: EngineConfig):
+    ax = _shard_axes(mesh)
+
+    def _rb(state_loc, shard_t):
+        st = _local(state_loc)
+        me = _shard_index(mesh)
+
+        def compact(st):
+            rows, ids = ivf._flat_rows(st)
+            idx, _ = ops.kmeans_assign(
+                rows, st.centroids, use_kernel=cfg.use_kernel,
+                fused_conversion=cfg.fused_conversion, interpret=cfg.interpret)
+            idx = jnp.where(ids >= 0, idx, -1)
+            fresh = ivf.empty_state(cfg, st.spill.shape[0])._replace(
+                centroids=st.centroids)
+            fresh, spilled = ivf._pack(fresh, rows, ids, idx, cfg)
+            return fresh, spilled.astype(jnp.int32)
+
+        def keep(st):
+            return st, jnp.zeros((), jnp.int32)
+
+        sel = (shard_t[0] < 0) | (me == shard_t[0])
+        st, spilled = jax.lax.cond(sel, compact, keep, st)
+        return _unlocal(st), spilled[None]
+
+    specs = state_specs(mesh)
+    return shard_map(
+        _rb, mesh=mesh,
+        in_specs=(specs, P()),
+        out_specs=(specs, P(ax)),
+        check_vma=False,
+    )
+
+
+def dist_rebuild(state: ivf.IVFState, cfg: EngineConfig, mesh: Mesh,
+                 shard: int = -1) -> Tuple[ivf.IVFState, jax.Array]:
+    """Shard-local compaction rebuild.
+
+    Shard `shard` (all shards when `shard < 0`) reassigns its live rows
+    against the *existing replicated centroids*, repacks them into fresh
+    lists, and drains its spill buffer — reclaiming tombstones without any
+    collective and without touching sibling shards, whose arrays pass
+    through bit-identical (`lax.cond` skips their compute entirely).
+
+    Centroids are intentionally NOT re-fit here: a shard-local k-means would
+    fork the replicated centroids and corrupt global insert routing.  Full
+    re-clustering is a bulk `dist_build`.
+
+    Returns (state, spilled i32[S]); `spilled[i]` is rows shard `i` could
+    not place (still in its spill buffer) — zeros for untouched shards.
+    """
+    return _rebuild_fn(mesh, cfg)(state, jnp.asarray([shard], jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _adopt_fn(mesh: Mesh):
+    def _sel(cur_loc, reb_loc, shard_t):
+        take = _shard_index(mesh) == shard_t[0]
+        return jax.tree.map(lambda a, b: jnp.where(take, b, a),
+                            cur_loc, reb_loc)
+
+    specs = state_specs(mesh)
+    return shard_map(
+        _sel, mesh=mesh,
+        in_specs=(specs, specs, P()),
+        out_specs=specs,
+        check_vma=False,
+    )
+
+
+def dist_adopt_shard(current: ivf.IVFState, rebuilt: ivf.IVFState,
+                     shard: int, mesh: Mesh) -> ivf.IVFState:
+    """Merge a shard-local rebuild into the live state.
+
+    Shard `shard` takes its slice of `rebuilt`; every sibling keeps its
+    slice of `current` (which, under the collection's writer lock, already
+    contains all writes that landed during the off-lock recompute).  This is
+    the sharded analogue of the single-shard rebuild's snapshot swap.
+    """
+    return _adopt_fn(mesh)(current, rebuilt, jnp.asarray([shard], jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _replay_fns(mesh: Mesh, cfg: EngineConfig):
+    ax = _shard_axes(mesh)
+    specs = state_specs(mesh)
+
+    def _ins(state_loc, shard_t, rows, ids):
+        st = _local(state_loc)
+
+        def do(st):
+            st2, sp = ivf._insert(st, rows, ids, cfg)
+            return st2, sp.astype(jnp.int32)
+
+        def keep(st):
+            return st, jnp.zeros((), jnp.int32)
+
+        st, sp = jax.lax.cond(_shard_index(mesh) == shard_t[0], do, keep, st)
+        return _unlocal(st), sp[None]
+
+    def _del(state_loc, shard_t, ids):
+        st = _local(state_loc)
+
+        def do(st):
+            return ivf._delete(st, ids)
+
+        def keep(st):
+            return st, jnp.zeros((), jnp.int32)
+
+        st, n = jax.lax.cond(_shard_index(mesh) == shard_t[0], do, keep, st)
+        return _unlocal(st), n[None]
+
+    ins_fn = shard_map(_ins, mesh=mesh, in_specs=(specs, P(), P(), P()),
+                       out_specs=(specs, P(ax)), check_vma=False)
+    del_fn = shard_map(_del, mesh=mesh, in_specs=(specs, P(), P()),
+                       out_specs=(specs, P(ax)), check_vma=False)
+    return ins_fn, del_fn
+
+
+def dist_replay(state: ivf.IVFState, log: Sequence[ivf.DeltaOp], shard: int,
+                cfg: EngineConfig, mesh: Mesh
+                ) -> Tuple[ivf.IVFState, int, int]:
+    """Re-apply a per-shard delta log onto shard `shard` only.
+
+    Mirrors the single-shard `ivf.replay` protocol: ops are applied in log
+    order before the rebuilt state is published.  Insert ops carry the
+    *shard-local* row slice the collection logged for this shard (the same
+    rows `dist_insert` routed there); delete ops carry the full id list and
+    tombstone whatever of it lives on this shard.  Sibling shards pass
+    through untouched.
+
+    Returns (state, n_spilled, n_tombstoned) for the replayed shard — both
+    still pending in the replayed state, so per-shard maintenance pressure
+    accounting stays truthful.
+    """
+    ins_fn, del_fn = _replay_fns(mesh, cfg)
+    shard_t = jnp.asarray([shard], jnp.int32)
+    spilled = jnp.zeros((), jnp.int32)
+    tombstoned = jnp.zeros((), jnp.int32)
+    for op in log:
+        if op.kind == "insert":
+            state, sp = ins_fn(state, shard_t, op.rows, op.ids)
+            spilled = spilled + sp[shard]
+        elif op.kind == "delete":
+            state, n = del_fn(state, shard_t, op.ids)
+            tombstoned = tombstoned + n[shard]
+        else:
+            raise ValueError(f"unknown delta op kind {op.kind!r}")
+    return state, int(spilled), int(tombstoned)
+
+
+# ---------------------------------------------------------------------------
+# Host-side shard layout helpers (persistence / elastic reshard)
+# ---------------------------------------------------------------------------
+
+def split_host(state: ivf.IVFState, n_shards: int) -> List[ivf.IVFState]:
+    """Global sharded state -> per-shard local `IVFState`s on host (numpy).
+
+    Inverts the `state_specs` layout: slab `i` of every sharded leaf is
+    shard `i`'s local view.  Used by sharded persistence, which writes one
+    checkpoint namespace per shard.
+    """
+    g = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), state)
+    c = g.centroids.shape[0]
+    l = g.lists.shape[1] // n_shards
+    sc = g.spill.shape[0] // n_shards
+    out = []
+    for i in range(n_shards):
+        out.append(ivf.IVFState(
+            centroids=g.centroids,
+            lists=g.lists[:, i * l:(i + 1) * l, :],
+            list_ids=g.list_ids[:, i * l:(i + 1) * l],
+            list_sizes=g.list_sizes[i * c:(i + 1) * c],
+            spill=g.spill[i * sc:(i + 1) * sc],
+            spill_ids=g.spill_ids[i * sc:(i + 1) * sc],
+            spill_size=g.spill_size[i:i + 1].reshape(()),
+            num_deleted=g.num_deleted[i:i + 1].reshape(()),
+        ))
+    return out
+
+
+def assemble_host(shards: Sequence[ivf.IVFState]) -> ivf.IVFState:
+    """Per-shard local states -> global arrays in `state_specs` layout.
+
+    The result is uncommitted (no device placement); the first `shard_map`
+    dispatch reshards it onto the mesh.
+    """
+    return ivf.IVFState(
+        centroids=jnp.asarray(shards[0].centroids),
+        lists=jnp.asarray(np.concatenate([np.asarray(s.lists) for s in shards],
+                                         axis=1)),
+        list_ids=jnp.asarray(np.concatenate(
+            [np.asarray(s.list_ids) for s in shards], axis=1)),
+        list_sizes=jnp.asarray(np.concatenate(
+            [np.asarray(s.list_sizes) for s in shards], axis=0)),
+        spill=jnp.asarray(np.concatenate([np.asarray(s.spill) for s in shards],
+                                         axis=0)),
+        spill_ids=jnp.asarray(np.concatenate(
+            [np.asarray(s.spill_ids) for s in shards], axis=0)),
+        spill_size=jnp.asarray(np.stack(
+            [np.asarray(s.spill_size).reshape(()) for s in shards])),
+        num_deleted=jnp.asarray(np.stack(
+            [np.asarray(s.num_deleted).reshape(()) for s in shards])),
+    )
+
+
+def reshard_host(shards: Sequence[ivf.IVFState], cfg: EngineConfig,
+                 n_new: int, spill_capacity: int) -> List[ivf.IVFState]:
+    """Re-pack saved per-shard states for a different shard count.
+
+    Host-side elastic reshard for load: gathers every live row from the
+    saved shards, deals them round-robin into `n_new` groups, and re-packs
+    each group against the saved (replicated) centroids with the ordinary
+    single-shard insert kernel.  Deterministic given the saved centroids;
+    rows that overflow a group's lists land in its spill buffer (rows past
+    spill capacity are dropped, same as live-insert semantics).
+    """
+    rows_all, ids_all = [], []
+    for st in shards:
+        rows = np.concatenate(
+            [np.asarray(st.lists).reshape(-1, st.centroids.shape[1]),
+             np.asarray(st.spill)], axis=0)
+        ids = np.concatenate([np.asarray(st.list_ids).reshape(-1),
+                              np.asarray(st.spill_ids)], axis=0)
+        live = ids >= 0
+        rows_all.append(rows[live])
+        ids_all.append(ids[live])
+    rows = np.concatenate(rows_all, axis=0)
+    ids = np.concatenate(ids_all, axis=0)
+    centroids = jnp.asarray(shards[0].centroids)
+    out = []
+    for i in range(n_new):
+        st = ivf.empty_state(cfg, spill_capacity)._replace(centroids=centroids)
+        chunk_rows, chunk_ids = rows[i::n_new], ids[i::n_new]
+        if len(chunk_ids):
+            st, _ = ivf.insert_shared(st, jnp.asarray(chunk_rows),
+                                      jnp.asarray(chunk_ids, jnp.int32), cfg)
+        out.append(st)
+    return out

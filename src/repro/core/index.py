@@ -248,6 +248,13 @@ class DeltaOp(NamedTuple):
 
     kind: "insert" | "delete".  For inserts `rows` is f32[B, D] and `ids`
     i32[B]; for deletes `rows` is None and `ids` the tombstoned ids.
+
+    Ops are appended under the collection's writer lock, so log order is
+    exactly state-application order — replaying the log onto a rebuilt
+    snapshot reproduces the live state.  On a mesh-sharded collection each
+    shard keeps its own log: insert ops there carry only the shard-local
+    row slice (the rows `dist_insert` routed to that shard), delete ops
+    the full id list (replay tombstones whatever of it the shard holds).
     """
     kind: str
     rows: Optional[jax.Array]

@@ -46,6 +46,10 @@ class Task:
     backend: str                 # latency | throughput | background
     priority: int = 0
     size_bytes: int = 0
+    # mesh shard a shard-local maintenance task targets (None = whole
+    # collection); lets stats/debugging attribute background rebuilds to
+    # the hot shard that triggered them
+    shard: Optional[int] = None
     submit_t: float = 0.0
     start_t: float = 0.0
     end_t: float = 0.0
@@ -72,6 +76,7 @@ class CompletedTask(NamedTuple):
     backend: str
     latency: float
     queue_wait: float
+    shard: Optional[int] = None
 
 
 class WindowedScheduler:
@@ -190,7 +195,8 @@ class WindowedScheduler:
                 self._inflight_bytes -= task.size_bytes
                 self._n_completed += 1
                 self.completed.append(CompletedTask(
-                    task.kind, task.backend, task.latency, task.queue_wait))
+                    task.kind, task.backend, task.latency, task.queue_wait,
+                    task.shard))
                 agg = self._agg.setdefault(
                     task.kind, {"n": 0, "wait_total": 0.0, "lat_total": 0.0})
                 agg["n"] += 1

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.configs.base import EngineConfig
 
@@ -49,18 +49,43 @@ class TemplateThresholds:
     index capacity or spill writes exceed `maintenance_spill_frac` of the
     spill buffer — but never below `maintenance_min_pending` pending rows,
     so a handful of deletes can't trigger a full re-cluster.
+
+    The maintenance thresholds are *per shard*: on a mesh-sharded
+    collection every shard owns `cfg.capacity` list slots and its own spill
+    buffer, and the controller schedules shard-local rebuilds independently
+    (one hot shard must not stall its siblings), so each shard's pressure
+    is compared against the same limits an unsharded (1-shard) collection
+    uses.  `maintenance_shard_min_pending` optionally lowers the pending-
+    rows floor for shard-local decisions — a shard holds 1/S of the
+    traffic, so its pressure accrues S× slower than the aggregate.
     """
     full_scan_batch: int = 32
     background_rebuild_chunk: int = 65536
     maintenance_tombstone_frac: float = 0.1
     maintenance_spill_frac: float = 0.5
     maintenance_min_pending: int = 64
+    maintenance_shard_min_pending: Optional[int] = None
 
     @classmethod
     def from_profile(cls, cfg: EngineConfig,
                      occupancy_ratio: float = 8.0) -> "TemplateThresholds":
         b = max(1, int(cfg.n_clusters / (occupancy_ratio * max(cfg.nprobe, 1))))
         return cls(full_scan_batch=b)
+
+    def maintenance_limits(self, capacity: int, spill_capacity: int,
+                           per_shard: bool = True) -> Tuple[int, int]:
+        """(tombstone_limit, spill_limit) trigger points for one shard.
+
+        `capacity` / `spill_capacity` are the SHARD-LOCAL slot counts (for
+        an unsharded collection, the whole index).  `per_shard=True` applies
+        `maintenance_shard_min_pending` when set; both limits are floored by
+        the pending-rows minimum so trickle deletes never schedule a
+        rebuild."""
+        pending = self.maintenance_min_pending
+        if per_shard and self.maintenance_shard_min_pending is not None:
+            pending = self.maintenance_shard_min_pending
+        return (max(pending, int(self.maintenance_tombstone_frac * capacity)),
+                max(pending, int(self.maintenance_spill_frac * spill_capacity)))
 
 
 DEFAULT_THRESHOLDS = TemplateThresholds()

@@ -1,4 +1,18 @@
-"""Shared test helpers."""
+"""Shared test helpers + test-process device topology.
+
+The sharded-maintenance tests need a real (if tiny) mesh, so the suite runs
+on 2 fake CPU devices.  This must happen before jax initializes, which is
+why it lives here (conftest imports precede every test module).  The flag
+is only set when the environment has not already chosen one — running under
+`run_dist_tests.sh`-style 8-device harnesses keeps their topology.
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=2")
+
 import numpy as np
 
 

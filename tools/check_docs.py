@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Docs health check (CI: runs after the test job steps).
+
+1. docs/ARCHITECTURE.md must exist (the architecture doc is part of the
+   public surface, not an optional nicety).
+2. Every intra-repo markdown link in every tracked .md file must resolve:
+   `[text](relative/path)` targets are checked against the filesystem
+   (anchors are stripped; external http(s)/mailto links are skipped).
+
+Usage: python tools/check_docs.py [repo_root]
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — target without scheme; tolerate titles: (path "title")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", "node_modules"}
+REQUIRED = ("docs/ARCHITECTURE.md",)
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check(root: str) -> list:
+    errors = []
+    for req in REQUIRED:
+        if not os.path.exists(os.path.join(root, req)):
+            errors.append(f"missing required doc: {req}")
+    for path in md_files(root):
+        rel = os.path.relpath(path, root)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # ignore fenced code blocks — they hold example syntax, not links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            target = target.split("#", 1)[0]
+            if not target:                                  # pure anchor
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: broken link -> {m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    errors = check(root)
+    if errors:
+        print("\n".join(errors))
+        print(f"\n{len(errors)} docs problem(s)")
+        return 1
+    n = sum(1 for _ in md_files(root))
+    print(f"docs ok: {n} markdown files, all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
