@@ -11,7 +11,9 @@ with the `MaintenanceController` auto-triggering delta-replay rebuilds from
 tombstone pressure — the paper's interleaved index maintenance), and HNSW
 serially (its build/search paths are not thread-safe — exactly the paper's
 point about graph indexes under updates), measuring insertions/s, queries/s,
-and the scheduler's peak in-flight bytes.
+and the scheduler's peak in-flight bytes.  A fused-sharded lane compares G
+mesh-sharded tenants served per-op (G `dist_query` dispatches) against the
+fused path (ONE `dist_fused_query` shard_map dispatch per round).
 """
 from __future__ import annotations
 
@@ -208,6 +210,52 @@ def _drive_sharded_maintenance():
     return wall, max(st["rebuilds"] - 1, 0), maint.get("triggered", 0), n_shards
 
 
+def _drive_sharded_batched():
+    """Fused-sharded lane: G mesh-sharded tenants answering the same query
+    load per-op (G `dist_query` dispatches per round) vs batched (ONE
+    `dist_fused_query` shard_map dispatch per round).  The gap is the
+    padded-GEMM benefit the fusion layer now extends to sharded tenants.
+    Returns None when the process has a single device.
+    """
+    import jax
+    if jax.device_count() < 2:
+        return None
+    mesh = jax.make_mesh((jax.device_count(),), ("shard",))
+    n_shards = mesh.size
+    tenants = ("t0", "t1", "t2")
+    cfg = EngineConfig(dim=DIM, n_clusters=256, list_capacity=128, k=10,
+                       use_kernel=False, kmeans_iters=4, window=8,
+                       shard_db=True)
+    qs = common.clustered_corpus(N_Q, DIM, 128, seed=3)
+    svc = MemoryService(maintenance=False)
+    n0 = (N0 // len(tenants)) - (N0 // len(tenants)) % n_shards
+    for i, name in enumerate(tenants):
+        svc.create_collection(name, cfg, mesh=mesh)
+        svc.build(name, common.clustered_corpus(n0, DIM, 128, seed=10 + i))
+    # warm both dispatch shapes
+    for name in tenants:
+        svc.query(name, qs[:Q_BATCH], k=10)
+    svc.query_many([(t, qs[:Q_BATCH]) for t in tenants], k=10)
+
+    round_rows = len(tenants) * Q_BATCH
+    rounds = range(0, N_Q - round_rows + 1, round_rows)   # full rounds only
+    t0 = time.perf_counter()
+    for qi in rounds:                           # per-op: G dispatches/round
+        for j, name in enumerate(tenants):
+            lo = qi + j * Q_BATCH
+            svc.query(name, qs[lo: lo + Q_BATCH], k=10)
+    per_op_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for qi in rounds:                           # fused: 1 dispatch/round
+        svc.query_many([(name, qs[qi + j * Q_BATCH: qi + (j + 1) * Q_BATCH])
+                        for j, name in enumerate(tenants)], k=10)
+    fused_wall = time.perf_counter() - t0
+    svc.shutdown()
+    n_queries = len(rounds) * round_rows
+    return per_op_wall, fused_wall, n_queries, len(tenants), n_shards
+
+
 def run():
     for mode in ("windowed", "all", "serial"):
         wall, st = _drive(mode)
@@ -244,6 +292,20 @@ def run():
                     "QPS", f"{n_shards}-shard mesh, auto-maintenance")
         common.emit("hybrid", "shard_maint_auto_rebuilds", rebuilds,
                     "shard-local rebuilds", f"{triggered} controller-triggered")
+
+    fused = _drive_sharded_batched()
+    if fused is None:
+        common.emit("hybrid", "fused_shard", "skipped", "",
+                    "single device; set XLA_FLAGS host device count >= 2")
+    else:
+        per_op_wall, fused_wall, n_queries, g, n_shards = fused
+        common.emit("hybrid", "per_op_shard_qps",
+                    round(n_queries / per_op_wall, 1), "QPS",
+                    f"{g} sharded tenants, {g} dispatches/round")
+        common.emit("hybrid", "fused_shard_qps",
+                    round(n_queries / fused_wall, 1), "QPS",
+                    f"{g} sharded tenants fused into 1 shard_map dispatch, "
+                    f"{n_shards}-shard mesh")
 
     # HNSW under the same interleaved load (serial: not thread-safe)
     x = common.clustered_corpus(N0, DIM, 128, seed=1)

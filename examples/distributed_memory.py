@@ -8,8 +8,10 @@ created with `shard_db=True` and a mesh shards its IVF lists row-wise over
 8 virtual host devices, each shard scans locally with the fused-GEMM path,
 and candidates merge into a global top-k — a billion-vector memory behind
 the same `MemoryService` calls.  Includes distributed insert routing,
-shard-local deletes + rebuild (one shard compacted, siblings untouched —
-see docs/ARCHITECTURE.md), and sharded save/load.
+cross-collection fused batched queries over sharded tenants (one shard_map
+dispatch for G tenants), shard-local deletes + rebuild (one shard
+compacted, siblings untouched — see docs/ARCHITECTURE.md), and sharded
+save/load.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -68,6 +70,21 @@ def main():
     print(f"deleted {n_hit} rows; shard-local rebuild of shard {hot} "
           f"reclaimed its tombstones in {out['rebuild_s']:.2f}s "
           f"({untouched}/{len(v_after)} sibling shards untouched)")
+
+    # cross-collection fused queries work for sharded tenants too: G
+    # same-mesh tenants batched in one window cost ONE shard_map dispatch
+    # (each device stacks its G shard-local blocks lane-wise), bitwise-
+    # equal to querying each tenant on its own
+    svc.create_collection("moon", cfg, mesh=mesh)
+    svc.build("moon", rng.standard_normal((4_096, cfg.dim),
+                                          dtype=np.float32))
+    (planet_r, moon_r) = svc.query_many([("planet", q), ("moon", q)], k=5)
+    solo_ids, solo_scores = svc.query("planet", q, k=5)
+    assert np.array_equal(planet_r[0], solo_ids)
+    assert np.array_equal(planet_r[1], solo_scores)
+    print("fused 2-tenant sharded window == per-tenant dist_query "
+          "(one dispatch, bitwise-equal results)")
+    svc.drop_collection("moon")
 
     # sharded persistence: one checkpoint namespace per shard
     import tempfile

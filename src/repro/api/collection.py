@@ -155,12 +155,36 @@ class Collection:
             self._version += 1
 
     def snapshot(self) -> ivf.IVFState:
+        """Wait-free versioned read of the current state pointer.
+
+        This is also the cross-collection fusion layer's read contract
+        (`repro.api.batch.execute_group`): unsharded snapshots stack
+        host-side; a sharded snapshot stays device-committed in the
+        `distributed.state_specs` layout, so the fused sharded dispatch can
+        stack each device's shard-local block lane-wise inside `shard_map`
+        without ever gathering the state to host.  A concurrent writer or
+        rebuild swaps the pointer rather than mutating a published state,
+        so whatever snapshot a fused dispatch grabbed stays internally
+        consistent for the lifetime of that dispatch.
+        """
         with self._lock:
             return self._state
 
     def version(self) -> int:
         with self._lock:
             return self._version
+
+    def versioned_snapshot(self) -> Tuple[ivf.IVFState, int]:
+        """(state, version) read atomically under the pointer lock.
+
+        The fusion layer's stack cache (`repro.api.batch.StackCache`) tags
+        a stacked G-state with the exact versions of the snapshots it was
+        built from; reading both under one lock acquisition means a cache
+        key can never pair a fresh version with a stale state (or vice
+        versa), so a version-match is proof the cached stack is current.
+        """
+        with self._lock:
+            return self._state, self._version
 
     def shard_versions(self) -> List[int]:
         """Per-shard version counters (length `n_shards`).
@@ -651,9 +675,20 @@ class Collection:
 
     def batch_signature(self, batch: int, k, nprobe, path):
         """Fusion key: collections whose pending queries share this key can
-        stack states and run as one padded GEMM dispatch."""
+        stack states and run as one padded GEMM dispatch.
+
+        The third element is the collection's mesh (None when unsharded):
+        sharded lanes fuse too (`distributed.dist_fused_query` stacks their
+        shard-local blocks per device), but only lanes living on the SAME
+        mesh — mesh identity covers both the device set and the axis shape,
+        so a 2-shard and a 4-shard tenant can never group.  `cfg` pins the
+        state shapes, `spill_capacity` the spill block, and the resolved
+        `(k, nprobe, path)` triple the kernel; together the key guarantees
+        every lane in a group stacks leaf-for-leaf.
+        """
         k, nprobe, path = self.resolve_query(batch, k, nprobe, path)
-        return (self.cfg, self.spill_capacity, self.sharded, k, nprobe, path)
+        return (self.cfg, self.spill_capacity,
+                self.mesh if self.sharded else None, k, nprobe, path)
 
     def stats(self) -> dict:
         """Counters + index occupancy snapshot.  Syncs device scalars (live/

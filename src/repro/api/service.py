@@ -5,8 +5,12 @@ Owns many named `Collection`s and one `WindowedScheduler`.  Every operation
 through `templates.route` for its execution path / backend class / priority,
 and runs on the scheduler; synchronous calls are thin `.result()` wrappers
 over the same path.  Pending queries submitted with `batch=True` park in a
-bounded window and fuse across collections (see `repro.api.batch`) so tenant
-count scales without per-tenant kernel launches.
+bounded window (`batch_window` ops; filling it auto-flushes, and waiting on
+a parked future flushes too, so nothing ever hangs unparked) and fuse
+across collections (see `repro.api.batch`) so tenant count scales without
+per-tenant kernel launches — mesh-sharded tenants included: same-signature
+sharded lanes stack shard-locally and run as one `shard_map` dispatch
+(`distributed.dist_fused_query`).
 
 Persistence: `save()` writes one service directory —
 
@@ -186,6 +190,9 @@ class MemoryService:
         self._collections: Dict[str, Collection] = {}
         self._lock = threading.RLock()
         self._pending: List[Tuple[MemoryOp, OpFuture]] = []
+        # reuses stacked fused-group states while lane versions are
+        # unchanged (see repro.api.batch.StackCache)
+        self._stack_cache = fuse.StackCache()
         self._maintenance_enabled = maintenance
         self._maintenance_poll_interval_s = maintenance_poll_interval_s
         self._maintenance: Optional[MaintenanceController] = None
@@ -240,7 +247,11 @@ class MemoryService:
 
     def drop_collection(self, name: str) -> None:
         with self._lock:
-            self._collections.pop(name, None)
+            coll = self._collections.pop(name, None)
+        if coll is not None:
+            # a cached fused-group stack holds a full copy of the dropped
+            # tenant's state — release it now, not at LRU churn
+            self._stack_cache.evict(coll)
 
     def list_collections(self) -> List[str]:
         with self._lock:
@@ -306,10 +317,32 @@ class MemoryService:
     def flush(self) -> int:
         """Fuse pending batched queries and dispatch them.
 
-        Groups pending ops by execution signature; each group becomes ONE
-        scheduler task running one padded-GEMM dispatch over the stacked
-        collection states, demuxed back to the per-op futures.  Returns the
-        number of fused dispatches submitted.
+        Drains the pending window (ops submitted with ``batch=True``) and
+        groups it by execution signature (`Collection.batch_signature`:
+        cfg shapes, mesh — None for unsharded tenants — and the resolved
+        `(k, nprobe, path)` triple).  A mixed window therefore splits into
+        independent groups — unsharded-fused, sharded-fused (one group per
+        mesh), and singletons — and each multi-op group becomes ONE
+        scheduler task running one stacked dispatch (`repro.api.batch`):
+        host-stacked `fused_query` for unsharded lanes, per-device-stacked
+        `distributed.dist_fused_query` for sharded lanes.  A group with a
+        single op has nothing to stack and takes the ordinary per-op path.
+        Returns the number of dispatches submitted (fused or singleton), so
+        G same-signature tenants — sharded or not — report as 1.
+
+        Who flushes: any of (a) the window filling to ``batch_window``
+        ops, (b) a caller waiting on a parked future (`OpFuture.wait`
+        triggers `_on_wait` = this method — a parked op can never hang),
+        (c) `query_many` after submitting its requests, (d) `shutdown()`,
+        or (e) an explicit call.  Safe to race from multiple threads: the
+        window is snatched under the registry lock, so every pending op is
+        dispatched exactly once.
+
+        Error propagation: a signature failure (e.g. the collection was
+        dropped between park and flush) settles that op's future with the
+        error; a failure while submitting or executing a group settles
+        every still-pending future in the group — parked futures are never
+        stranded.
         """
         with self._lock:
             pending, self._pending = self._pending, []
@@ -329,17 +362,16 @@ class MemoryService:
 
         n = 0
         for sig, ops in groups.items():
-            cfg, _spill, sharded, k, nprobe, path = sig
+            cfg, _spill, mesh, k, nprobe, path = sig
             try:
-                if sharded or len(ops) == 1:
-                    # nothing to fuse (or fusion unsupported): fall back to
-                    # the ordinary per-op scheduler path
-                    for op, fut in ops:
-                        self._submit_single_query(op, fut, k, nprobe, path)
-                        n += 1
+                if len(ops) == 1:
+                    # a lone op has nothing to fuse with — ordinary per-op
+                    # scheduler path (sharded ops included: dist_query)
+                    op, fut = ops[0]
+                    self._submit_single_query(op, fut, k, nprobe, path)
                 else:
-                    self._submit_fused(ops, cfg, k, nprobe, path)
-                    n += 1
+                    self._submit_fused(ops, cfg, k, nprobe, path, mesh=mesh)
+                n += 1
             except BaseException as e:    # noqa: BLE001 — e.g. a concurrent
                 for _, fut in ops:        # drop_collection; never strand a
                     if not fut.done():    # future in a dead group
@@ -368,9 +400,23 @@ class MemoryService:
 
     def _submit_fused(self, ops: List[Tuple[MemoryOp, OpFuture]],
                       cfg: EngineConfig, k: int, nprobe: int,
-                      path: str) -> None:
-        # one lane per distinct collection; ops against the same collection
-        # concatenate into its lane and demux by row span
+                      path: str, mesh=None) -> None:
+        """Submit one same-signature group as ONE fused scheduler task.
+
+        Lane assembly: one lane per distinct collection; several ops
+        against the same collection concatenate into its lane and demux by
+        row span, so a group degenerates gracefully to G=1 (one lane, one
+        stacked state — still a single dispatch).  `mesh` comes from the
+        group's batch signature: None runs the host-stacked unsharded
+        kernel, a Mesh runs `dist_fused_query` over the lanes' shard-local
+        blocks (every lane is on this same mesh, by signature).
+
+        The task routes through `templates.route(..., fused_lanes=G)` —
+        fused dispatches are throughput-class regardless of per-lane batch
+        (see templates.py).  Error propagation mirrors `flush`: any failure
+        inside the task settles every still-pending future in the group
+        before re-raising to the scheduler.
+        """
         lanes: Dict[str, dict] = {}
         for op, fut in ops:
             lane = lanes.setdefault(
@@ -389,7 +435,8 @@ class MemoryService:
                 results = fuse.execute_group(
                     [lanes[nm]["coll"] for nm in order],
                     [np.concatenate(lanes[nm]["qs"]) for nm in order],
-                    cfg, k, nprobe, path)
+                    cfg, k, nprobe, path, mesh=mesh,
+                    cache=self._stack_cache)
                 fuse.demux([lanes[nm]["entries"] for nm in order], results)
             except BaseException as e:    # noqa: BLE001
                 for fut in futs:
@@ -399,7 +446,7 @@ class MemoryService:
             return len(results)
 
         total = sum(lanes[nm]["rows"] for nm in order)
-        plan = templates.route("query", total, cfg)
+        plan = templates.route("query", total, cfg, fused_lanes=len(order))
         nbytes = sum(int(getattr(op.payload, "nbytes", 0)) for op, _ in ops)
         task = Task(fn=fn, kind="query", backend=plan.backend,
                     priority=plan.priority, size_bytes=nbytes)
@@ -457,7 +504,8 @@ class MemoryService:
             maint = self._maintenance
         return {"collections": {n: c.stats() for n, c in colls.items()},
                 "scheduler": sched.stats() if sched is not None else {},
-                "maintenance": maint.stats() if maint is not None else {}}
+                "maintenance": maint.stats() if maint is not None else {},
+                "stack_cache": self._stack_cache.stats()}
 
     def shutdown(self) -> None:
         with self._lock:

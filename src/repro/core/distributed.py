@@ -9,6 +9,12 @@ Centroids are replicated.  Consequences:
              local top-k, and a tiny all-gather of k candidates per device
              merges globally (the paper's host-side top-k aggregation, made
              hierarchical).
+  * fused query — G mesh-sharded collections with same-signature pending
+             query lanes answer in ONE dispatch: each device stacks its G
+             shard-local blocks lane-wise ([G, rows/shard, …]) inside
+             `shard_map` and runs the vmapped scan + batched hierarchical
+             merge (`dist_fused_query` — the cross-collection batching
+             layer's sharded backend, see `repro.api.batch`).
   * insert — batch rows are routed block-wise to devices (shard s takes the
              contiguous block [s*B/S, (s+1)*B/S) — the per-shard delta-log
              replay relies on exactly this placement); assignment is local
@@ -219,6 +225,114 @@ def dist_query(state: ivf.IVFState, q, cfg: EngineConfig, mesh: Mesh, k: int):
     candidates per shard and a final top-k — hierarchical merge.
     """
     return _query_fn(mesh, cfg, k)(state, q)
+
+
+# ---------------------------------------------------------------------------
+# Fused cross-collection query (lanes × shards)
+# ---------------------------------------------------------------------------
+
+def _stacked_specs(mesh: Mesh) -> ivf.IVFState:
+    """PartitionSpecs for a lane-stacked distributed state: every leaf of
+    `state_specs` gains a leading (replicated) G axis — shards keep their
+    slot-axis slices, so each device holds a [G, rows/shard, …] stack."""
+    return jax.tree.map(lambda sp: P(None, *sp), state_specs(mesh))
+
+
+@functools.lru_cache(maxsize=None)
+def _stack_fn(mesh: Mesh, g: int):
+    specs = state_specs(mesh)
+
+    def _stk(*states_loc):
+        # Lane-wise stack of the G shard-local states, ON DEVICE: inside
+        # shard_map each `states_loc[i]` is collection i's local IVFState,
+        # so this stack builds the [G, rows/shard, …] layout per device —
+        # no host gather, no cross-device traffic.
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states_loc)
+
+    return shard_map(
+        _stk, mesh=mesh,
+        in_specs=(specs,) * g,
+        out_specs=_stacked_specs(mesh),
+        check_vma=False,
+    )
+
+
+def dist_stack_states(states: Sequence[ivf.IVFState],
+                      mesh: Mesh) -> ivf.IVFState:
+    """Stack G same-shaped globally-sharded states lane-wise, per device.
+
+    The sharded analogue of `repro.api.batch.stack_states`: the result's
+    leaves carry a leading G axis while staying sharded exactly as before
+    (`_stacked_specs`), so the stack is G local copies per device and zero
+    collectives.  The fusion layer's stack cache reuses the result across
+    dispatches while every lane's version is unchanged — query-heavy
+    windows then skip the copy entirely.
+    """
+    return _stack_fn(mesh, len(states))(*states)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_query_fn(mesh: Mesh, cfg: EngineConfig, k: int,
+                    nprobe: int, path: str):
+    """Memoized like `_query_fn`, keyed per (mesh, cfg, k, nprobe, path);
+    the lane count G is carried by the stacked operand's leading axis (a
+    new G only re-traces, it does not re-wrap).
+
+    `nprobe`/`path` are part of the key for signature unity with the
+    batching layer (`Collection.batch_signature` groups pending lanes by
+    the resolved query triple) even though the sharded tier — exactly like
+    the per-op `dist_query` it must match bitwise — always serves queries
+    via the local full scan + hierarchical merge.
+    """
+    ax = _shard_axes(mesh)
+
+    def _fq(q_loc, stacked_loc):
+        def one(state, qi):
+            return ivf.query_full_scan(_local(state), qi, cfg, k)
+
+        ids_l, sc_l = jax.vmap(one)(stacked_loc, q_loc)            # [G, B, k]
+        # same hierarchical merge as `dist_query`, batched over lanes:
+        # k candidates per shard per lane, one small all-gather, final top-k
+        ids_g = jax.lax.all_gather(ids_l, ax, axis=2, tiled=True)  # [G, B, S*k]
+        sc_g = jax.lax.all_gather(sc_l, ax, axis=2, tiled=True)
+        top, pos = jax.lax.top_k(sc_g, k)
+        return jnp.take_along_axis(ids_g, pos, axis=2), top
+
+    return shard_map(
+        _fq, mesh=mesh,
+        in_specs=(P(), _stacked_specs(mesh)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+
+def dist_fused_query_stacked(stacked: ivf.IVFState, q, cfg: EngineConfig,
+                             mesh: Mesh, k: int, nprobe: int, path: str):
+    """ONE dispatch answering G sharded collections' query lanes at once.
+
+    stacked: a `dist_stack_states` result — every leaf carries a leading G
+             axis over same-shaped globally-sharded `IVFState`s (same mesh,
+             same `EngineConfig` shapes — the batch signature guarantees
+             this; the stack cache may reuse it across dispatches)
+    q:       f32[G, Bmax, D] padded per-lane query batches (replicated)
+    Returns (ids i32[G, Bmax, k], scores f32[G, Bmax, k]).
+
+    This is the lanes × shards generalization of the fusion invariant: the
+    per-device compute is a vmapped full scan over a [G, rows/shard, …]
+    stack of the collections' shard-local blocks, so lane `g` only ever
+    scans collection `g`'s rows, and the hierarchical candidate merge is
+    batched over lanes inside the same `shard_map`.  Bitwise-equivalent to
+    G separate `dist_query` calls (asserted by tests/test_batch_fusion.py),
+    for one dispatch instead of G.
+    """
+    return _fused_query_fn(mesh, cfg, k, nprobe, path)(q, stacked)
+
+
+def dist_fused_query(states: Sequence[ivf.IVFState], q, cfg: EngineConfig,
+                     mesh: Mesh, k: int, nprobe: int, path: str):
+    """`dist_fused_query_stacked` over freshly-stacked states (uncached)."""
+    return dist_fused_query_stacked(dist_stack_states(states, mesh), q,
+                                    cfg, mesh, k, nprobe, path)
 
 
 # ---------------------------------------------------------------------------

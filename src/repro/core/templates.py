@@ -93,14 +93,29 @@ DEFAULT_THRESHOLDS = TemplateThresholds()
 
 def route(kind: str, batch: int, cfg: EngineConfig,
           thresholds: Optional[TemplateThresholds] = None,
-          concurrent_queries: bool = False) -> ExecPlan:
+          concurrent_queries: bool = False,
+          fused_lanes: int = 1) -> ExecPlan:
     """Map (workload kind, batch) -> execution plan.
 
     kind: "build" | "query" | "insert" | "delete" | "rebuild"
+
+    fused_lanes: number of distinct collection lanes a cross-collection
+    batched dispatch stacks (1 = a plain single-collection op).  A fused
+    dispatch — sharded or not — is one padded GEMM over G·Bmax rows: even
+    when each lane's batch sits below the full-scan crossover, the stacked
+    dispatch is throughput-shaped, so it routes to the throughput class and
+    the full submission window rather than stealing a latency worker for
+    what is structurally bulk work.  (The execution *path* of a fused group
+    is fixed by its batch signature, not by this plan — the plan decides
+    scheduling only.)
     """
     t = thresholds or TemplateThresholds.from_profile(cfg)
     if kind == "query":
-        if batch >= t.full_scan_batch:
+        full = batch >= t.full_scan_batch
+        if fused_lanes > 1:
+            return ExecPlan("query", "full_scan" if full else "probed",
+                            "throughput", 0, cfg.window)
+        if full:
             return ExecPlan("query", "full_scan", "throughput", 0, cfg.window)
         return ExecPlan("query", "probed", "latency", 0, max(cfg.window // 2, 1))
     if kind == "insert":

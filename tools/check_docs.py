@@ -5,10 +5,15 @@
    public surface, not an optional nicety).
 2. Every intra-repo markdown link in every tracked .md file must resolve:
    `[text](relative/path)` targets are checked against the filesystem
-   (anchors are stripped; external http(s)/mailto links are skipped).
+   (external http(s)/mailto links are skipped).
+3. Every `#anchor` fragment — both pure intra-document (`#section`) and
+   cross-document (`other.md#section`) — must name a real heading in the
+   target markdown file, using GitHub's heading-slug rules (lowercase,
+   punctuation stripped, spaces → dashes, duplicate slugs suffixed -1,
+   -2, …).
 
 Usage: python tools/check_docs.py [repo_root]
-Exits non-zero listing every broken link.
+Exits non-zero listing every broken link or anchor.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ import sys
 
 # [text](target) — target without scheme; tolerate titles: (path "title")
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*(?:#+\s*)?$", re.M)
 _SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", "node_modules"}
 REQUIRED = ("docs/ARCHITECTURE.md",)
 
@@ -30,28 +36,69 @@ def md_files(root: str):
                 yield os.path.join(dirpath, f)
 
 
+def _strip_fences(text: str) -> str:
+    """Fenced code blocks hold example syntax, not links or headings."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading (sans duplicate suffixing).
+
+    Inline markup is dropped the way GitHub renders it: `code`, **bold**,
+    [link](target) → link text.  Then lowercase, keep only word chars /
+    spaces / hyphens, spaces → hyphens.
+    """
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)   # [txt](url) → txt
+    h = re.sub(r"[`*_]", "", h).strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(text: str) -> set:
+    """All anchor slugs a markdown document exposes (duplicates suffixed)."""
+    slugs, seen = set(), {}
+    for m in _HEADING.finditer(_strip_fences(text)):
+        s = github_slug(m.group(1))
+        n = seen.get(s, 0)
+        seen[s] = n + 1
+        slugs.add(s if n == 0 else f"{s}-{n}")
+    return slugs
+
+
 def check(root: str) -> list:
     errors = []
     for req in REQUIRED:
         if not os.path.exists(os.path.join(root, req)):
             errors.append(f"missing required doc: {req}")
+    slug_cache: dict = {}
+
+    def slugs_of(path: str) -> set:
+        if path not in slug_cache:
+            with open(path, encoding="utf-8") as f:
+                slug_cache[path] = heading_slugs(f.read())
+        return slug_cache[path]
+
     for path in md_files(root):
         rel = os.path.relpath(path, root)
         with open(path, encoding="utf-8") as f:
-            text = f.read()
-        # ignore fenced code blocks — they hold example syntax, not links
-        text = re.sub(r"```.*?```", "", text, flags=re.S)
+            text = _strip_fences(f.read())
         for m in _LINK.finditer(text):
             target = m.group(1)
             if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
                 continue
-            target = target.split("#", 1)[0]
-            if not target:                                  # pure anchor
-                continue
-            resolved = os.path.normpath(
+            target, _, frag = target.partition("#")
+            resolved = path if not target else os.path.normpath(
                 os.path.join(os.path.dirname(path), target))
             if not os.path.exists(resolved):
                 errors.append(f"{rel}: broken link -> {m.group(1)}")
+                continue
+            if frag and resolved.endswith(".md"):
+                # case-sensitive: browsers match fragments to the (lower-
+                # case) heading ids exactly; a wrong-case anchor is broken
+                if frag not in slugs_of(resolved):
+                    errors.append(
+                        f"{rel}: broken anchor -> {m.group(1)} "
+                        f"(no heading slugs to '#{frag}')")
     return errors
 
 
@@ -64,7 +111,8 @@ def main() -> int:
         print(f"\n{len(errors)} docs problem(s)")
         return 1
     n = sum(1 for _ in md_files(root))
-    print(f"docs ok: {n} markdown files, all intra-repo links resolve")
+    print(f"docs ok: {n} markdown files, all intra-repo links + anchors "
+          "resolve")
     return 0
 
 
