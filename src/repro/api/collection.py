@@ -43,6 +43,7 @@ and can re-pack host-side onto a different mesh (``reshard=True``).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import threading
@@ -685,9 +686,15 @@ class Collection:
         state shapes, `spill_capacity` the spill block, and the resolved
         `(k, nprobe, path)` triple the kernel; together the key guarantees
         every lane in a group stacks leaf-for-leaf.
+
+        The store-dtype policy is an explicit element even though `cfg`
+        already determines it: fusing an int8 lane with an f32 lane would
+        stack mismatched treedefs (the quantized state carries extra
+        leaves) and mix scan pipelines — the policy split must hold even if
+        the cfg element is ever relaxed to a shape-only key.
         """
         k, nprobe, path = self.resolve_query(batch, k, nprobe, path)
-        return (self.cfg, self.spill_capacity,
+        return (self.cfg, self.cfg.store_dtype, self.spill_capacity,
                 self.mesh if self.sharded else None, k, nprobe, path)
 
     def stats(self) -> dict:
@@ -707,7 +714,8 @@ class Collection:
                  "spill": int(np.sum(jax.device_get(state.spill_size))),
                  "deleted": int(np.sum(jax.device_get(state.num_deleted))),
                  "shards": self._n_shards,
-                 "shard_versions": shard_versions}
+                 "shard_versions": shard_versions,
+                 **ivf.footprint(state)}
         else:
             s = ivf.stats(state)
         s.update(counters)
@@ -736,7 +744,8 @@ class Collection:
             meta = {"name": self.name, "next_id": self._next_id,
                     "counters": dict(self.counters), "built": self._built,
                     "spill_capacity": self.spill_capacity, "step": step,
-                    "spill_floors": list(self._spill_floors)}
+                    "spill_floors": list(self._spill_floors),
+                    "store_dtype": self.cfg.store_dtype}
         if self.sharded:
             from repro.core import distributed as dce
             meta["sharded"] = True
@@ -769,6 +778,13 @@ class Collection:
             with open(mpath) as f:
                 meta = json.load(f)
         spill_capacity = int(meta.get("spill_capacity", 4096))
+        # the snapshot's dtype policy wins: the checkpointed treedef carries
+        # (or lacks) the quantized leaves, so restoring under the wrong
+        # policy would fail the leaf-count check — pre-policy snapshots
+        # default to the caller's cfg
+        saved_dtype = meta.get("store_dtype")
+        if saved_dtype is not None and saved_dtype != cfg.store_dtype:
+            cfg = dataclasses.replace(cfg, store_dtype=saved_dtype)
         coll = cls(name, cfg, spill_capacity=spill_capacity, **kw)
         if bool(meta.get("sharded", False)) != coll.sharded:
             saved = "sharded" if meta.get("sharded") else "unsharded"
@@ -807,8 +823,9 @@ class Collection:
         else:
             restored = Checkpointer(directory).restore(
                 coll.state._asdict(), step=step)
-            coll.state = ivf.IVFState(**{k: jnp.asarray(v)
-                                         for k, v in restored.items()})
+            coll.state = ivf.IVFState(**{
+                k: jnp.asarray(v) if v is not None else None
+                for k, v in restored.items()})
             floors = meta.get("spill_floors")
             if floors is None:   # pre-sharding snapshots: scalar field
                 floors = [int(meta.get("spill_floor", 0))]

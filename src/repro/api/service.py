@@ -362,7 +362,7 @@ class MemoryService:
 
         n = 0
         for sig, ops in groups.items():
-            cfg, _spill, mesh, k, nprobe, path = sig
+            cfg, _dtype, _spill, mesh, k, nprobe, path = sig
             try:
                 if len(ops) == 1:
                     # a lone op has nothing to fuse with — ordinary per-op

@@ -214,8 +214,10 @@ class EngineConfig:
     nprobe: int = 32
     k: int = 16
     metric: str = "ip"               # ip | l2
-    store_dtype: str = "float32"     # database storage dtype
+    store_dtype: str = "float32"     # scan-store dtype policy: float32 | int8
     compute_dtype: str = "bfloat16"  # MXU operand dtype (paper: FP16 on HMX)
+    rescore_k: int = 128             # int8 policy: coarse survivors rescored
+                                     # exactly in f32 (clamped to >= k)
 
     # ablation switches (paper Fig. 8 ladder)
     aligned: bool = True             # tile-aligned cluster count / padding
@@ -231,6 +233,14 @@ class EngineConfig:
     shard_db: bool = False           # shard lists over the mesh data axes
 
     def __post_init__(self):
+        if self.store_dtype not in ("float32", "int8"):
+            raise ValueError(
+                f"EngineConfig.store_dtype {self.store_dtype!r} is not "
+                "supported; use 'float32' (exact row store) or 'int8' "
+                "(quantized coarse-scan store + exact f32 rescore)")
+        if self.rescore_k < 1:
+            raise ValueError("EngineConfig.rescore_k must be >= 1 "
+                             f"(got {self.rescore_k})")
         if self.aligned:
             assert self.n_clusters % 128 == 0, "aligned engine: n_clusters % 128"
             assert self.dim % 128 == 0, "aligned engine: dim % 128"
@@ -239,6 +249,11 @@ class EngineConfig:
     @property
     def capacity(self) -> int:
         return self.n_clusters * self.list_capacity
+
+    @property
+    def quantized(self) -> bool:
+        """True when the scan store is int8 (coarse scan + f32 rescore)."""
+        return self.store_dtype == "int8"
 
 
 # ---------------------------------------------------------------------------

@@ -76,10 +76,16 @@ def _shard_index(mesh: Mesh) -> jax.Array:
     return idx
 
 
-def state_specs(mesh: Mesh) -> ivf.IVFState:
-    """PartitionSpecs for a distributed IVFState."""
+def state_specs(mesh: Mesh, quantized: bool = False) -> ivf.IVFState:
+    """PartitionSpecs for a distributed IVFState.
+
+    The quantized store shards exactly like its f32 counterpart: codes along
+    the slot axis, per-list scalars stacked per shard (the `list_sizes`
+    pattern), the per-row spill sidebands along the spill axis.  `quantized`
+    must match the state's treedef — a None leaf takes no spec.
+    """
     ax = _shard_axes(mesh)
-    return ivf.IVFState(
+    specs = ivf.IVFState(
         centroids=P(),                 # replicated
         lists=P(None, ax, None),       # slot axis sharded
         list_ids=P(None, ax),
@@ -89,6 +95,18 @@ def state_specs(mesh: Mesh) -> ivf.IVFState:
         spill_size=P(ax),
         num_deleted=P(ax),
     )
+    if quantized:
+        specs = specs._replace(
+            q_lists=P(None, ax, None),
+            q_scales=P(ax),            # stacked per-shard per-list: [S*C]
+            q_zeros=P(ax),
+            q_norms=P(None, ax),       # per-slot, alongside list_ids
+            q_spill=P(ax, None),
+            q_spill_scales=P(ax),
+            q_spill_zeros=P(ax),
+            q_spill_norms=P(ax),
+        )
+    return specs
 
 
 def empty_dist_state(cfg: EngineConfig, mesh: Mesh,
@@ -96,16 +114,29 @@ def empty_dist_state(cfg: EngineConfig, mesh: Mesh,
     """Global arrays for the sharded state (local view == IVFState)."""
     s = mesh.size
     c, l, d = cfg.n_clusters, cfg.list_capacity, cfg.dim
-    return ivf.IVFState(
+    sc = spill_capacity_per_shard
+    st = ivf.IVFState(
         centroids=jnp.zeros((c, d), jnp.float32),
         lists=jnp.zeros((c, l * s, d), jnp.float32),
         list_ids=jnp.full((c, l * s), -1, jnp.int32),
         list_sizes=jnp.zeros((s * c,), jnp.int32),
-        spill=jnp.zeros((s * spill_capacity_per_shard, d), jnp.float32),
-        spill_ids=jnp.full((s * spill_capacity_per_shard,), -1, jnp.int32),
+        spill=jnp.zeros((s * sc, d), jnp.float32),
+        spill_ids=jnp.full((s * sc,), -1, jnp.int32),
         spill_size=jnp.zeros((s,), jnp.int32),
         num_deleted=jnp.zeros((s,), jnp.int32),
     )
+    if cfg.quantized:
+        st = st._replace(
+            q_lists=jnp.zeros((c, l * s, d), jnp.int8),
+            q_scales=jnp.ones((s * c,), jnp.float32),
+            q_zeros=jnp.zeros((s * c,), jnp.float32),
+            q_norms=jnp.zeros((c, l * s), jnp.float32),
+            q_spill=jnp.zeros((s * sc, d), jnp.int8),
+            q_spill_scales=jnp.ones((s * sc,), jnp.float32),
+            q_spill_zeros=jnp.zeros((s * sc,), jnp.float32),
+            q_spill_norms=jnp.zeros((s * sc,), jnp.float32),
+        )
+    return st
 
 
 def _local(state: ivf.IVFState) -> ivf.IVFState:
@@ -176,7 +207,7 @@ def dist_build(key, x, ids, cfg: EngineConfig, mesh: Mesh,
         st, spilled = ivf._pack(st, x_loc, ids_loc, idx, cfg)
         return _unlocal(st), spilled[None]
 
-    specs = state_specs(mesh)
+    specs = state_specs(mesh, cfg.quantized)
     fn = shard_map(
         _build, mesh=mesh,
         in_specs=(P(ax), P(ax), P(ax)),
@@ -212,7 +243,7 @@ def _query_fn(mesh: Mesh, cfg: EngineConfig, k: int):
 
     return shard_map(
         _query, mesh=mesh,
-        in_specs=(state_specs(mesh), P()),
+        in_specs=(state_specs(mesh, cfg.quantized), P()),
         out_specs=(P(), P()),
         check_vma=False,
     )
@@ -231,16 +262,17 @@ def dist_query(state: ivf.IVFState, q, cfg: EngineConfig, mesh: Mesh, k: int):
 # Fused cross-collection query (lanes × shards)
 # ---------------------------------------------------------------------------
 
-def _stacked_specs(mesh: Mesh) -> ivf.IVFState:
+def _stacked_specs(mesh: Mesh, quantized: bool = False) -> ivf.IVFState:
     """PartitionSpecs for a lane-stacked distributed state: every leaf of
     `state_specs` gains a leading (replicated) G axis — shards keep their
     slot-axis slices, so each device holds a [G, rows/shard, …] stack."""
-    return jax.tree.map(lambda sp: P(None, *sp), state_specs(mesh))
+    return jax.tree.map(lambda sp: P(None, *sp),
+                        state_specs(mesh, quantized))
 
 
 @functools.lru_cache(maxsize=None)
-def _stack_fn(mesh: Mesh, g: int):
-    specs = state_specs(mesh)
+def _stack_fn(mesh: Mesh, g: int, quantized: bool):
+    specs = state_specs(mesh, quantized)
 
     def _stk(*states_loc):
         # Lane-wise stack of the G shard-local states, ON DEVICE: inside
@@ -252,7 +284,7 @@ def _stack_fn(mesh: Mesh, g: int):
     return shard_map(
         _stk, mesh=mesh,
         in_specs=(specs,) * g,
-        out_specs=_stacked_specs(mesh),
+        out_specs=_stacked_specs(mesh, quantized),
         check_vma=False,
     )
 
@@ -268,7 +300,7 @@ def dist_stack_states(states: Sequence[ivf.IVFState],
     dispatches while every lane's version is unchanged — query-heavy
     windows then skip the copy entirely.
     """
-    return _stack_fn(mesh, len(states))(*states)
+    return _stack_fn(mesh, len(states), states[0].quantized)(*states)
 
 
 @functools.lru_cache(maxsize=None)
@@ -300,7 +332,7 @@ def _fused_query_fn(mesh: Mesh, cfg: EngineConfig, k: int,
 
     return shard_map(
         _fq, mesh=mesh,
-        in_specs=(P(), _stacked_specs(mesh)),
+        in_specs=(P(), _stacked_specs(mesh, cfg.quantized)),
         out_specs=(P(), P()),
         check_vma=False,
     )
@@ -348,7 +380,7 @@ def _insert_fn(mesh: Mesh, cfg: EngineConfig):
         st, spilled = ivf.insert(st, x_loc, ids_loc, cfg)
         return _unlocal(st), spilled[None]
 
-    specs = state_specs(mesh)
+    specs = state_specs(mesh, cfg.quantized)
     return shard_map(
         _insert, mesh=mesh,
         in_specs=(specs, P(ax), P(ax)),
@@ -370,7 +402,7 @@ def dist_insert(state: ivf.IVFState, x, ids, cfg: EngineConfig, mesh: Mesh):
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _delete_fn(mesh: Mesh):
+def _delete_fn(mesh: Mesh, quantized: bool):
     ax = _shard_axes(mesh)
 
     def _del(state_loc, ids_loc):
@@ -378,7 +410,7 @@ def _delete_fn(mesh: Mesh):
         st, n = ivf._delete(st, ids_loc)
         return _unlocal(st), n[None]
 
-    specs = state_specs(mesh)
+    specs = state_specs(mesh, quantized)
     return shard_map(
         _del, mesh=mesh,
         in_specs=(specs, P()),
@@ -396,7 +428,7 @@ def dist_delete(state: ivf.IVFState, ids, mesh: Mesh
     count of slots actually tombstoned, so callers can account maintenance
     pressure *per shard* (the whole point of shard-local rebuild scheduling).
     """
-    return _delete_fn(mesh)(state, ids)
+    return _delete_fn(mesh, state.quantized)(state, ids)
 
 
 # ---------------------------------------------------------------------------
@@ -429,7 +461,7 @@ def _rebuild_fn(mesh: Mesh, cfg: EngineConfig):
         st, spilled = jax.lax.cond(sel, compact, keep, st)
         return _unlocal(st), spilled[None]
 
-    specs = state_specs(mesh)
+    specs = state_specs(mesh, cfg.quantized)
     return shard_map(
         _rb, mesh=mesh,
         in_specs=(specs, P()),
@@ -459,13 +491,13 @@ def dist_rebuild(state: ivf.IVFState, cfg: EngineConfig, mesh: Mesh,
 
 
 @functools.lru_cache(maxsize=None)
-def _adopt_fn(mesh: Mesh):
+def _adopt_fn(mesh: Mesh, quantized: bool):
     def _sel(cur_loc, reb_loc, shard_t):
         take = _shard_index(mesh) == shard_t[0]
         return jax.tree.map(lambda a, b: jnp.where(take, b, a),
                             cur_loc, reb_loc)
 
-    specs = state_specs(mesh)
+    specs = state_specs(mesh, quantized)
     return shard_map(
         _sel, mesh=mesh,
         in_specs=(specs, specs, P()),
@@ -483,13 +515,14 @@ def dist_adopt_shard(current: ivf.IVFState, rebuilt: ivf.IVFState,
     contains all writes that landed during the off-lock recompute).  This is
     the sharded analogue of the single-shard rebuild's snapshot swap.
     """
-    return _adopt_fn(mesh)(current, rebuilt, jnp.asarray([shard], jnp.int32))
+    return _adopt_fn(mesh, current.quantized)(
+        current, rebuilt, jnp.asarray([shard], jnp.int32))
 
 
 @functools.lru_cache(maxsize=None)
 def _replay_fns(mesh: Mesh, cfg: EngineConfig):
     ax = _shard_axes(mesh)
-    specs = state_specs(mesh)
+    specs = state_specs(mesh, cfg.quantized)
 
     def _ins(state_loc, shard_t, rows, ids):
         st = _local(state_loc)
@@ -572,7 +605,7 @@ def split_host(state: ivf.IVFState, n_shards: int) -> List[ivf.IVFState]:
     sc = g.spill.shape[0] // n_shards
     out = []
     for i in range(n_shards):
-        out.append(ivf.IVFState(
+        st = ivf.IVFState(
             centroids=g.centroids,
             lists=g.lists[:, i * l:(i + 1) * l, :],
             list_ids=g.list_ids[:, i * l:(i + 1) * l],
@@ -581,7 +614,19 @@ def split_host(state: ivf.IVFState, n_shards: int) -> List[ivf.IVFState]:
             spill_ids=g.spill_ids[i * sc:(i + 1) * sc],
             spill_size=g.spill_size[i:i + 1].reshape(()),
             num_deleted=g.num_deleted[i:i + 1].reshape(()),
-        ))
+        )
+        if g.q_lists is not None:
+            st = st._replace(
+                q_lists=g.q_lists[:, i * l:(i + 1) * l, :],
+                q_scales=g.q_scales[i * c:(i + 1) * c],
+                q_zeros=g.q_zeros[i * c:(i + 1) * c],
+                q_norms=g.q_norms[:, i * l:(i + 1) * l],
+                q_spill=g.q_spill[i * sc:(i + 1) * sc],
+                q_spill_scales=g.q_spill_scales[i * sc:(i + 1) * sc],
+                q_spill_zeros=g.q_spill_zeros[i * sc:(i + 1) * sc],
+                q_spill_norms=g.q_spill_norms[i * sc:(i + 1) * sc],
+            )
+        out.append(st)
     return out
 
 
@@ -591,7 +636,7 @@ def assemble_host(shards: Sequence[ivf.IVFState]) -> ivf.IVFState:
     The result is uncommitted (no device placement); the first `shard_map`
     dispatch reshards it onto the mesh.
     """
-    return ivf.IVFState(
+    st = ivf.IVFState(
         centroids=jnp.asarray(shards[0].centroids),
         lists=jnp.asarray(np.concatenate([np.asarray(s.lists) for s in shards],
                                          axis=1)),
@@ -608,6 +653,19 @@ def assemble_host(shards: Sequence[ivf.IVFState]) -> ivf.IVFState:
         num_deleted=jnp.asarray(np.stack(
             [np.asarray(s.num_deleted).reshape(()) for s in shards])),
     )
+    if shards[0].q_lists is not None:
+        def cat(name, axis):
+            return jnp.asarray(np.concatenate(
+                [np.asarray(getattr(s, name)) for s in shards], axis=axis))
+
+        st = st._replace(
+            q_lists=cat("q_lists", 1), q_scales=cat("q_scales", 0),
+            q_zeros=cat("q_zeros", 0), q_norms=cat("q_norms", 1),
+            q_spill=cat("q_spill", 0), q_spill_scales=cat("q_spill_scales", 0),
+            q_spill_zeros=cat("q_spill_zeros", 0),
+            q_spill_norms=cat("q_spill_norms", 0),
+        )
+    return st
 
 
 def reshard_host(shards: Sequence[ivf.IVFState], cfg: EngineConfig,

@@ -154,8 +154,9 @@ class AgenticMemoryEngine:
         eng = cls(cfg, **kw)
         ck = Checkpointer(directory)
         restored = ck.restore(eng.state._asdict(), step=step)
-        eng.state = ivf.IVFState(**{k: jnp.asarray(v)
-                                    for k, v in restored.items()})
+        eng.state = ivf.IVFState(**{
+            k: jnp.asarray(v) if v is not None else None
+            for k, v in restored.items()})
         eng._built = True
         mpath = os.path.join(directory, "engine.json")
         if os.path.exists(mpath):

@@ -28,6 +28,18 @@ from repro.kernels import ops
 
 
 class IVFState(NamedTuple):
+    """IVF index pytree.  The eight required fields are the exact f32 tier.
+
+    The optional ``q_*`` tail is the int8 quantized scan store (present iff
+    the collection's ``EngineConfig.store_dtype == "int8"``): affine per-
+    list codes for the lists tier, per-row codes for the spill tier, plus
+    precomputed dequantized-row norms (so L2 queries never touch the f32
+    rows during the coarse scan).  ``None`` fields are empty pytree
+    subtrees, so every tree-shaped operation (stacking, vmap, shard_map
+    specs, checkpoint flatten) works unchanged for both policies — but the
+    two policies have different treedefs, which is exactly what keeps them
+    in separate jit caches and separate fusion groups.
+    """
     centroids: jax.Array      # f32[C, D]
     lists: jax.Array          # f32[C, L, D]
     list_ids: jax.Array       # i32[C, L]
@@ -36,6 +48,15 @@ class IVFState(NamedTuple):
     spill_ids: jax.Array      # i32[S]
     spill_size: jax.Array     # i32[]
     num_deleted: jax.Array    # i32[]
+    # --- optional int8 quantized scan store (store_dtype == "int8") ---
+    q_lists: Optional[jax.Array] = None         # i8[C, L, D]
+    q_scales: Optional[jax.Array] = None        # f32[C] per-list scale
+    q_zeros: Optional[jax.Array] = None         # f32[C] per-list zero-point
+    q_norms: Optional[jax.Array] = None         # f32[C, L] dequant row norms
+    q_spill: Optional[jax.Array] = None         # i8[S, D]
+    q_spill_scales: Optional[jax.Array] = None  # f32[S] per-row scale
+    q_spill_zeros: Optional[jax.Array] = None   # f32[S] per-row zero-point
+    q_spill_norms: Optional[jax.Array] = None   # f32[S] dequant row norms
 
     @property
     def n_clusters(self) -> int:
@@ -49,10 +70,14 @@ class IVFState(NamedTuple):
     def list_capacity(self) -> int:
         return self.lists.shape[1]
 
+    @property
+    def quantized(self) -> bool:
+        return self.q_lists is not None
+
 
 def empty_state(cfg: EngineConfig, spill_capacity: int = 4096) -> IVFState:
     c, l, d = cfg.n_clusters, cfg.list_capacity, cfg.dim
-    return IVFState(
+    state = IVFState(
         centroids=jnp.zeros((c, d), jnp.float32),
         lists=jnp.zeros((c, l, d), jnp.float32),
         list_ids=jnp.full((c, l), -1, jnp.int32),
@@ -62,10 +87,114 @@ def empty_state(cfg: EngineConfig, spill_capacity: int = 4096) -> IVFState:
         spill_size=jnp.zeros((), jnp.int32),
         num_deleted=jnp.zeros((), jnp.int32),
     )
+    if cfg.quantized:
+        state = state._replace(
+            q_lists=jnp.zeros((c, l, d), jnp.int8),
+            q_scales=jnp.ones((c,), jnp.float32),
+            q_zeros=jnp.zeros((c,), jnp.float32),
+            q_norms=jnp.zeros((c, l), jnp.float32),
+            q_spill=jnp.zeros((spill_capacity, d), jnp.int8),
+            q_spill_scales=jnp.ones((spill_capacity,), jnp.float32),
+            q_spill_zeros=jnp.zeros((spill_capacity,), jnp.float32),
+            q_spill_norms=jnp.zeros((spill_capacity,), jnp.float32),
+        )
+    return state
 
 
 def live_count(state: IVFState) -> jax.Array:
     return (jnp.sum(state.list_ids >= 0) + jnp.sum(state.spill_ids >= 0))
+
+
+# ---------------------------------------------------------------------------
+# Int8 quantized scan store (store_dtype == "int8")
+#
+# Affine quantization: row ~= scale * code + zero with codes in [-127, 127],
+# scale/zero shared per IVF list (lists tier) or per row (spill tier).  The
+# granularity matches the layout: a list is the contiguous slab one scan
+# tile streams, so its scale/zero ride along as two scalars; spill rows
+# have no slab structure, so they carry their own.  Round-trip error is
+# bounded by scale/2 = (max-min)/508 per component (tested).  The f32 rows
+# remain the source of truth — the quantized store is a derived coarse-scan
+# stream, re-derived for exactly the slots each write touches.
+# ---------------------------------------------------------------------------
+
+def _affine_encode(x: jax.Array, axes: Tuple[int, ...]):
+    """(codes i8, scale, zero) with x ~= scale*codes + zero over `axes`."""
+    mn = jnp.min(x, axis=axes)
+    mx = jnp.max(x, axis=axes)
+    zero = 0.5 * (mn + mx)
+    scale = jnp.maximum((mx - mn) / 254.0, 1e-8)
+    sb = jnp.expand_dims(scale, axes)
+    zb = jnp.expand_dims(zero, axes)
+    codes = jnp.clip(jnp.round((x - zb) / sb), -127, 127).astype(jnp.int8)
+    return codes, scale, zero
+
+
+def _quantize_lists(lists: jax.Array, list_ids: jax.Array):
+    """Per-list affine quantization of [..., L, D] slabs.
+
+    Tombstoned/empty slots are masked to 0 for the range fit so stale row
+    values cannot inflate a list's scale; their codes are garbage-free but
+    irrelevant (every scan masks ids < 0).  Returns (codes, scale, zero,
+    norms) where norms are the DEQUANTIZED row norms — precomputed here so
+    L2 coarse scans order exactly like scanning the dequantized rows.
+    """
+    masked = jnp.where((list_ids >= 0)[..., None], lists, 0.0)
+    codes, scale, zero = _affine_encode(masked, (-2, -1))
+    deq = (codes.astype(jnp.float32) * scale[..., None, None]
+           + zero[..., None, None])
+    norms = jnp.sum(deq * deq, axis=-1)
+    return codes, scale, zero, norms
+
+
+def _quantize_rows(rows: jax.Array, ids: jax.Array):
+    """Per-row affine quantization of [..., D] rows (the spill tier)."""
+    masked = jnp.where((ids >= 0)[..., None], rows, 0.0)
+    codes, scale, zero = _affine_encode(masked, (-1,))
+    deq = codes.astype(jnp.float32) * scale[..., None] + zero[..., None]
+    norms = jnp.sum(deq * deq, axis=-1)
+    return codes, scale, zero, norms
+
+
+def _quantize_state(state: IVFState) -> IVFState:
+    """Full requantization of every tier (build / rebuild / pack time)."""
+    ql, qs, qz, qn = _quantize_lists(state.lists, state.list_ids)
+    sp, ss, sz, sn = _quantize_rows(state.spill, state.spill_ids)
+    return state._replace(q_lists=ql, q_scales=qs, q_zeros=qz, q_norms=qn,
+                          q_spill=sp, q_spill_scales=ss, q_spill_zeros=sz,
+                          q_spill_norms=sn)
+
+
+def _requantize_touched(state: IVFState, x: jax.Array, cl_w: jax.Array,
+                        spos_w: jax.Array) -> IVFState:
+    """Incremental coherence after an insert batch.
+
+    Re-derives the quantized store for exactly what the scatter touched:
+    the lists rows landed in (gather slab -> refit scale/zero -> scatter
+    back; duplicate cluster hits write identical values, overflow rows'
+    writes drop at the same OOB index the f32 scatter dropped at) and the
+    spill rows that were appended (per-row encode at the same positions).
+    Deletes need no counterpart: tombstoning only flips ids, and every
+    scan — quantized or not — masks ids < 0.
+    """
+    c = state.n_clusters
+    touched = jnp.clip(cl_w, 0, c - 1)
+    codes, sc, zr, nrm = _quantize_lists(state.lists[touched],
+                                         state.list_ids[touched])
+    new = state._replace(
+        q_lists=state.q_lists.at[cl_w].set(codes, mode="drop"),
+        q_scales=state.q_scales.at[cl_w].set(sc, mode="drop"),
+        q_zeros=state.q_zeros.at[cl_w].set(zr, mode="drop"),
+        q_norms=state.q_norms.at[cl_w].set(nrm, mode="drop"),
+    )
+    scodes, ssc, szr, snrm = _quantize_rows(x, jnp.zeros(x.shape[0],
+                                                         jnp.int32))
+    return new._replace(
+        q_spill=new.q_spill.at[spos_w].set(scodes, mode="drop"),
+        q_spill_scales=new.q_spill_scales.at[spos_w].set(ssc, mode="drop"),
+        q_spill_zeros=new.q_spill_zeros.at[spos_w].set(szr, mode="drop"),
+        q_spill_norms=new.q_spill_norms.at[spos_w].set(snrm, mode="drop"),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +246,8 @@ def _pack(state: "IVFState", x: jax.Array, ids: jax.Array,
     new = state._replace(lists=lists, list_ids=list_ids,
                          list_sizes=list_sizes, spill=spill,
                          spill_ids=spill_ids, spill_size=spill_size)
+    if cfg.quantized:
+        new = _quantize_state(new)
     return new, jnp.sum(over)
 
 
@@ -192,6 +323,8 @@ def _insert(state: IVFState, x: jax.Array, ids: jax.Array,
     new = state._replace(lists=lists, list_ids=list_ids,
                          list_sizes=list_sizes, spill=spill,
                          spill_ids=spill_ids, spill_size=spill_size)
+    if cfg.quantized:
+        new = _requantize_touched(new, x, cl_w, spos_w)
     return new, n_overflow
 
 
@@ -323,6 +456,80 @@ def _order_scores(scores: jax.Array, metric: str) -> jax.Array:
     return -scores if metric == "l2" else scores
 
 
+# --- int8 asymmetric two-stage query (coarse quantized scan -> f32 rescore)
+
+def _flat_codes(state: IVFState):
+    """Quantized analogue of `_flat_rows`: the int8 coarse-scan stream with
+    per-row-expanded scale/zero/norm sidebands (lists tier repeats its
+    per-list scalars over L slots; the spill tier is already per-row)."""
+    c, l, d = state.q_lists.shape
+    codes = jnp.concatenate(
+        [state.q_lists.reshape(c * l, d), state.q_spill], axis=0)
+    scales = jnp.concatenate(
+        [jnp.repeat(state.q_scales, l), state.q_spill_scales])
+    zeros = jnp.concatenate(
+        [jnp.repeat(state.q_zeros, l), state.q_spill_zeros])
+    norms = jnp.concatenate(
+        [state.q_norms.reshape(c * l), state.q_spill_norms])
+    return codes, scales, zeros, norms
+
+
+def _gather_flat_rows(state: IVFState, cand: jax.Array) -> jax.Array:
+    """f32 rows for flat candidate indices [..., R] (lists first, then
+    spill — `_flat_rows` order) WITHOUT materializing the flat copy: the
+    rescore touches rescore_k rows per query, not the whole store."""
+    c, l, _ = state.lists.shape
+    n_list = c * l
+    li = jnp.clip(cand, 0, n_list - 1)
+    in_rows = state.lists[li // l, li % l]
+    sp_rows = state.spill[jnp.clip(cand - n_list, 0,
+                                   state.spill.shape[0] - 1)]
+    return jnp.where((cand >= n_list)[..., None], sp_rows, in_rows)
+
+
+def _rescore_topk(q: jax.Array, rows: jax.Array, ids: jax.Array,
+                  metric: str, k: int):
+    """Exact f32 rescore of candidates rows f32[B, R, D] -> top-k.
+
+    Pure f32 einsum, deliberately NOT the bf16 fused kernel: the rescore
+    exists to erase the coarse tier's quantization error, so it must be
+    the highest-precision arithmetic in the pipeline.  O(B*R*D) — noise
+    next to the coarse scan.  Returns (ids, scores, rows) at the final k.
+    """
+    s = jnp.einsum("brd,bd->br", rows, q.astype(jnp.float32))
+    if metric == "l2":
+        s = jnp.sum(rows * rows, axis=-1) - 2.0 * s
+    mask_val = float("inf") if metric == "l2" else float("-inf")
+    s = jnp.where(ids >= 0, s, mask_val)
+    top, ii = jax.lax.top_k(_order_scores(s, metric), k)
+    return (jnp.take_along_axis(ids, ii, axis=1), top,
+            jnp.take_along_axis(rows, ii[..., None], axis=1))
+
+
+def _rescore_r(state: IVFState, cfg: EngineConfig, k: int, n: int) -> int:
+    """Static coarse-survivor count: rescore_k clamped to [k, n]."""
+    return min(max(cfg.rescore_k, k), n)
+
+
+def _query_full_scan_q8(state: IVFState, q: jax.Array, cfg: EngineConfig,
+                        k: int):
+    """Two-stage full scan: int8 coarse scan over every row, exact f32
+    rescore of the top `rescore_k` survivors.  The coarse tier streams 1
+    byte/component instead of 4; the f32 tier is touched only for
+    B*rescore_k gathered rows."""
+    codes, scales, zeros, norms = _flat_codes(state)
+    ids = jnp.concatenate(
+        [state.list_ids.reshape(-1), state.spill_ids], axis=0)
+    coarse = ops.scan_scores_q8(
+        q, codes, ids, scales, zeros,
+        norms if cfg.metric == "l2" else None, metric=cfg.metric,
+        use_kernel=cfg.use_kernel, interpret=cfg.interpret)
+    r = _rescore_r(state, cfg, k, codes.shape[0])
+    _, cand = jax.lax.top_k(_order_scores(coarse, cfg.metric), r)
+    rows = _gather_flat_rows(state, cand)
+    return _rescore_topk(q, rows, ids[cand], cfg.metric, k)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "k"))
 def query_full_scan(state: IVFState, q: jax.Array, cfg: EngineConfig,
                     k: int) -> Tuple[jax.Array, jax.Array]:
@@ -331,7 +538,13 @@ def query_full_scan(state: IVFState, q: jax.Array, cfg: EngineConfig,
     For large query batches the probed-subset union approaches the full DB,
     so the MXU-friendly move is one dense scan (paper Fig. 4: big GEMMs are
     where the matrix engine wins).  Returns (ids i32[B,k], scores f32[B,k]).
+
+    Under the int8 store policy this is the asymmetric two-stage pipeline:
+    quantized coarse scan -> exact f32 rescore of the top `cfg.rescore_k`.
     """
+    if cfg.quantized:
+        out_ids, top, _ = _query_full_scan_q8(state, q, cfg, k)
+        return out_ids, top
     rows, ids = _flat_rows(state)
     scores = ops.scan_scores(
         q, rows, ids, _metric_norms(rows, cfg.metric), metric=cfg.metric,
@@ -346,6 +559,8 @@ def query_full_scan_rows(state: IVFState, q: jax.Array, cfg: EngineConfig,
                          k: int):
     """Like query_full_scan but also returns the vectors f32[B, k, D]
     (used by the fused RAG serving path to splice memories into the prompt)."""
+    if cfg.quantized:
+        return _query_full_scan_q8(state, q, cfg, k)
     rows, ids = _flat_rows(state)
     scores = ops.scan_scores(
         q, rows, ids, _metric_norms(rows, cfg.metric), metric=cfg.metric,
@@ -380,10 +595,38 @@ def query_probed(state: IVFState, q: jax.Array, cfg: EngineConfig,
 
     def one(args):
         qi, pi = args                                   # [D], [nprobe]
-        rows = state.lists[pi].reshape(nprobe * l, d)   # contiguous slabs
         rids = state.list_ids[pi].reshape(nprobe * l)
-        rows = jnp.concatenate([rows, spill_rows], axis=0)
         rids = jnp.concatenate([rids, spill_ids], axis=0)
+        if cfg.quantized:
+            # Quantized latency path: the probed slabs stream as int8 codes
+            # with their per-list affine scalars; survivors rescore in f32.
+            codes = jnp.concatenate(
+                [state.q_lists[pi].reshape(nprobe * l, d), state.q_spill],
+                axis=0)
+            scales = jnp.concatenate(
+                [jnp.repeat(state.q_scales[pi], l), state.q_spill_scales])
+            zeros = jnp.concatenate(
+                [jnp.repeat(state.q_zeros[pi], l), state.q_spill_zeros])
+            norms = jnp.concatenate(
+                [state.q_norms[pi].reshape(nprobe * l), state.q_spill_norms])
+            s = ops.scan_scores_q8(
+                qi[None], codes, rids, scales, zeros,
+                norms if cfg.metric == "l2" else None, metric=cfg.metric,
+                use_kernel=cfg.use_kernel, interpret=cfg.interpret)
+            r = _rescore_r(state, cfg, k, codes.shape[0])
+            _, cand = jax.lax.top_k(_order_scores(s, cfg.metric), r)
+            # survivor f32 rows: probed-slab indices map through pi
+            n_probe_rows = nprobe * l
+            li = jnp.clip(cand, 0, n_probe_rows - 1)
+            in_rows = state.lists[pi[li // l], li % l]
+            sp = spill_rows[jnp.clip(cand - n_probe_rows, 0,
+                                     spill_rows.shape[0] - 1)]
+            rows = jnp.where((cand >= n_probe_rows)[..., None], sp, in_rows)
+            out_ids, top, _ = _rescore_topk(qi[None], rows, rids[cand],
+                                            cfg.metric, k)
+            return out_ids[0], top[0]
+        rows = state.lists[pi].reshape(nprobe * l, d)   # contiguous slabs
+        rows = jnp.concatenate([rows, spill_rows], axis=0)
         s = ops.scan_scores(
             qi[None], rows, rids, _metric_norms(rows, cfg.metric),
             metric=cfg.metric, use_kernel=cfg.use_kernel,
@@ -399,6 +642,24 @@ def query_probed(state: IVFState, q: jax.Array, cfg: EngineConfig,
 # Stats
 # ---------------------------------------------------------------------------
 
+def footprint(state: IVFState) -> dict:
+    """Resident-size accounting for the scan store.
+
+    `bytes_per_row` is what the coarse scan streams per stored vector (1
+    byte/component under int8 policy, 4 under f32 — the paper's DRAM-traffic
+    argument in numbers); `index_bytes` sums every materialized leaf,
+    including the f32 rescore tier a quantized index still keeps.
+    """
+    row_itemsize = 1 if state.quantized else 4
+    return {
+        "bytes_per_row": state.dim * row_itemsize,
+        "index_bytes": sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves(state)),
+        "store_dtype": "int8" if state.quantized else "float32",
+    }
+
+
 def stats(state: IVFState) -> dict:
     sizes = jax.device_get(state.list_sizes)
     return {
@@ -410,4 +671,5 @@ def stats(state: IVFState) -> dict:
         "deleted": int(jax.device_get(state.num_deleted)),
         "max_list": int(sizes.max()),
         "mean_list": float(sizes.mean()),
+        **footprint(state),
     }

@@ -30,6 +30,7 @@ class ExecPlan:
     backend: str             # latency | throughput | background
     priority: int            # 0 = latency-critical, larger = later
     window: int              # scheduler submission window for this class
+    scan_dtype: str = "float32"   # coarse-scan operand stream: float32 | int8
 
 
 @dataclass
@@ -110,25 +111,31 @@ def route(kind: str, batch: int, cfg: EngineConfig,
     scheduling only.)
     """
     t = thresholds or TemplateThresholds.from_profile(cfg)
+    # the per-collection dtype policy rides on every plan: a quantized
+    # collection's scans stream int8 codes (coarse scan + f32 rescore), and
+    # the batching layer only fuses lanes whose plans agree on this
+    sd = cfg.store_dtype
     if kind == "query":
         full = batch >= t.full_scan_batch
         if fused_lanes > 1:
             return ExecPlan("query", "full_scan" if full else "probed",
-                            "throughput", 0, cfg.window)
+                            "throughput", 0, cfg.window, sd)
         if full:
-            return ExecPlan("query", "full_scan", "throughput", 0, cfg.window)
-        return ExecPlan("query", "probed", "latency", 0, max(cfg.window // 2, 1))
+            return ExecPlan("query", "full_scan", "throughput", 0, cfg.window,
+                            sd)
+        return ExecPlan("query", "probed", "latency", 0,
+                        max(cfg.window // 2, 1), sd)
     if kind == "insert":
         # paper update template: lightweight, frequent; never preempts queries
         backend = "background" if concurrent_queries else "throughput"
-        return ExecPlan("update", "insert", backend, 1, cfg.window)
+        return ExecPlan("update", "insert", backend, 1, cfg.window, sd)
     if kind == "delete":
-        return ExecPlan("update", "delete", "background", 1, cfg.window)
+        return ExecPlan("update", "delete", "background", 1, cfg.window, sd)
     if kind == "build":
         # bulk build: one-shot index construction, GEMM-heavy like rebuild
         # but callers usually block on it -> throughput class, not background
-        return ExecPlan("index", "build", "throughput", 1, 1)
+        return ExecPlan("index", "build", "throughput", 1, 1, sd)
     if kind == "rebuild":
         # paper index template: large, latency-insensitive, all units
-        return ExecPlan("index", "rebuild", "background", 2, 1)
+        return ExecPlan("index", "rebuild", "background", 2, 1, sd)
     raise ValueError(f"unknown workload kind {kind!r}")

@@ -66,6 +66,43 @@ def scan_scores(q, db, ids, db_norms=None, *, metric="ip", use_kernel=True,
 
 
 @functools.partial(jax.jit, static_argnames=(
+    "metric", "use_kernel", "interpret", "block_m", "block_n", "block_k"))
+def scan_scores_q8(q, codes, ids, scales, zeros, db_norms=None, *,
+                   metric="ip", use_kernel=True, interpret=True,
+                   block_m=128, block_n=512, block_k=512):
+    """Quantized coarse scan: fp32[B, N] approximate scores.
+
+    q is fp32[B, D]; it is quantized here (symmetric per-query int8, see
+    `ref.quantize_queries`) so the kernel and the jnp reference consume
+    identical integer operands.  codes/scales/zeros are the affine int8 row
+    store (per-row scale/zero-point); `db_norms` must be the DEQUANTIZED
+    row norms for L2.  Pads B/N/D to block multiples — code padding is
+    exact because the `sum(qc)` correction is taken before padding; padded
+    DB rows get id -1 (masked), padded query rows are sliced off.
+    """
+    b, n = q.shape[0], codes.shape[0]
+    qc, sq = _ref.quantize_queries(q)
+    if not use_kernel:
+        return _ref.scan_scores_q8_ref(q, codes, ids, scales, zeros,
+                                       db_norms, metric=metric)
+    corr = sq * jnp.sum(qc.astype(jnp.int32), axis=1)
+    qp = _pad_to(_pad_to(qc, 0, block_m), 1, block_k)
+    cp = _pad_to(_pad_to(codes, 0, block_n), 1, block_k)
+    idsp = _pad_to(ids, 0, block_n, value=-1)
+    scalesp = _pad_to(scales, 0, block_n)
+    zerosp = _pad_to(zeros, 0, block_n)
+    sqp = _pad_to(sq, 0, block_m)
+    corrp = _pad_to(corr, 0, block_m)
+    if db_norms is not None:
+        db_norms = _pad_to(db_norms, 0, block_n)
+    out = _scan.scan_scores_q8(
+        qp, cp, idsp, scalesp, zerosp, sqp, corrp, db_norms,
+        metric=metric, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+    return out[:b, :n]
+
+
+@functools.partial(jax.jit, static_argnames=(
     "use_kernel", "fused_conversion", "interpret", "block_m", "block_c",
     "block_k"))
 def kmeans_assign(x, centroids, *, use_kernel=True, fused_conversion=True,

@@ -29,6 +29,48 @@ def scan_scores_ref(q, db, ids, db_norms=None, *, metric="ip",
     return jnp.where((ids >= 0)[None, :], scores, mask_val)
 
 
+def quantize_queries(q):
+    """Symmetric per-query int8 codes for the quantized coarse scan.
+
+    Returns (codes int8[B, D], sq f32[B]) with q ~= sq[:, None] * codes.
+    Shared by the Pallas kernel wrapper and this reference so kernel/ref
+    parity is over identical integer operands.
+    """
+    q = q.astype(jnp.float32)
+    sq = jnp.maximum(jnp.max(jnp.abs(q), axis=1), 1e-30) / 127.0
+    codes = jnp.clip(jnp.round(q / sq[:, None]), -127, 127).astype(jnp.int8)
+    return codes, sq
+
+
+def scan_scores_q8_ref(q, codes, ids, scales, zeros, db_norms=None, *,
+                       metric="ip"):
+    """Oracle for kernels.scan_scores_q8 (identical integer arithmetic).
+
+    codes int8[N, D] is the affine row store: row_n ~= scales[n] * codes_n
+    + zeros[n] (per-row scale/zero-point, broadcast over D).  The scan
+    integer-accumulates int8 x int8 -> int32 and applies the affine
+    correction in the f32 epilogue:
+
+        q_hat . row_hat = sq * scale_n * (qc . c_n) + (sq * sum(qc)) * zero_n
+
+    For L2 `db_norms` must be ||row_hat||^2 of the DEQUANTIZED rows (the
+    quantized store keeps them precomputed) — the coarse distances then
+    order exactly like scanning the dequantized rows would.
+    """
+    qc, sq = quantize_queries(q)
+    acc = jax.lax.dot_general(
+        qc, codes, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)                       # i32[B, N]
+    corr = sq * jnp.sum(qc.astype(jnp.int32), axis=1)           # f32[B]
+    scores = (acc.astype(jnp.float32) * sq[:, None] * scales[None, :]
+              + corr[:, None] * zeros[None, :])
+    if metric == "l2":
+        assert db_norms is not None, "q8 L2 scan needs precomputed row norms"
+        scores = db_norms[None, :] - 2.0 * scores
+    mask_val = float("inf") if metric == "l2" else NEG_INF
+    return jnp.where((ids >= 0)[None, :], scores, mask_val)
+
+
 def kmeans_assign_ref(x, centroids, *, fused_conversion=True,
                       compute_dtype=jnp.bfloat16):
     """Oracle for kernels.kmeans_assign: (idx, dist-modulo-||x||^2)."""

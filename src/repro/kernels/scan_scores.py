@@ -81,6 +81,118 @@ def _scan_scores_kernel(
         out_ref[...] = jnp.where(valid[None, :], scores, mask_val)
 
 
+def _scan_scores_q8_kernel(
+    qc_ref,       # [bm, bk] int8 quantized queries
+    db_ref,       # [bn, bk] int8 row codes
+    ids_ref,      # [1, bn] int32
+    scales_ref,   # [1, bn] fp32 per-row affine scale
+    zeros_ref,    # [1, bn] fp32 per-row affine zero-point
+    norms_ref,    # [1, bn] fp32 dequantized-row norms (zeros for IP)
+    qmeta_ref,    # [bm, 128] fp32: col 0 = sq (query scale), col 1 = sq*sum(qc)
+    out_ref,      # [bm, bn] fp32
+    acc_ref,      # scratch [bm, bn] int32
+    *,
+    k_steps: int,
+    metric: str,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 x int8 -> int32 on the matrix unit: the narrow operands stream
+    # straight from the quantized store — no f32 (or dequantized) copy of
+    # the tile ever exists, in HBM *or* in registers.  This is the int8
+    # analogue of the fused f32->bf16 conversion above, one step further:
+    # conversion work is replaced by an integer MAC plus an O(B+N) epilogue.
+    acc_ref[...] += jax.lax.dot_general(
+        qc_ref[...], db_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        # affine correction (per query row x per db row, rank-1 + scaling):
+        #   q_hat . row_hat = sq*scale_n*(qc . c_n) + (sq*sum(qc))*zero_n
+        sq = qmeta_ref[:, 0:1]                      # [bm, 1]
+        corr = qmeta_ref[:, 1:2]                    # [bm, 1]
+        scales = scales_ref[0, :][None, :]
+        zeros = zeros_ref[0, :][None, :]
+        scores = (acc_ref[...].astype(jnp.float32) * sq * scales
+                  + corr * zeros)
+        if metric == "l2":
+            scores = norms_ref[0, :][None, :] - 2.0 * scores
+        valid = ids_ref[0, :] >= 0
+        mask_val = POS_INF if metric == "l2" else NEG_INF
+        out_ref[...] = jnp.where(valid[None, :], scores, mask_val)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "block_m", "block_n", "block_k", "interpret"),
+)
+def scan_scores_q8(
+    qc: jax.Array,           # int8[B, D] quantized queries (ref.quantize_queries)
+    codes: jax.Array,        # int8[N, D] affine row codes
+    ids: jax.Array,          # int32[N]
+    scales: jax.Array,       # fp32[N] per-row scale
+    zeros: jax.Array,        # fp32[N] per-row zero-point
+    sq: jax.Array,           # fp32[B] query scales
+    corr: jax.Array,         # fp32[B] sq * sum(qc) per query
+    db_norms: jax.Array | None = None,   # fp32[N] dequantized norms (L2 only)
+    *,
+    metric: str = "ip",
+    block_m: int = 128,
+    block_n: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Quantized coarse scan: fp32[B, N] approximate scores from int8 operands.
+
+    Shapes must be pre-padded to block multiples (``ops.scan_scores_q8``
+    pads; code padding is harmless because `corr` is computed over the real
+    D before padding).  Per-query scalars ride in a [B, 128] lane-aligned
+    sideband so every ref keeps a TPU-friendly 2D block shape.
+    """
+    b, d = qc.shape
+    n, d2 = codes.shape
+    assert d == d2, (qc.shape, codes.shape)
+    assert b % block_m == 0 and n % block_n == 0 and d % block_k == 0, (
+        f"unpadded shapes {qc.shape} x {codes.shape} for blocks "
+        f"({block_m},{block_n},{block_k})")
+    if db_norms is None:
+        db_norms = jnp.zeros((n,), jnp.float32)
+    qmeta = jnp.zeros((b, 128), jnp.float32)
+    qmeta = qmeta.at[:, 0].set(sq).at[:, 1].set(corr)
+
+    k_steps = d // block_k
+    grid = (b // block_m, n // block_n, k_steps)
+
+    kernel = functools.partial(
+        _scan_scores_q8_kernel, k_steps=k_steps, metric=metric)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((block_m, 128), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        # int32 accumulator lives in VMEM across the k loop; the f32
+        # epilogue converts in-register once per output tile
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(qc, codes, ids[None, :], scales[None, :], zeros[None, :],
+      db_norms[None, :], qmeta)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
