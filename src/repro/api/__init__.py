@@ -17,7 +17,8 @@ with an identical execution signature fuse into one padded GEMM dispatch.
 """
 from repro.api.collection import Collection
 from repro.api.ops import MemoryOp, OpFuture
+from repro.api.residency import ResidencyManager
 from repro.api.service import MaintenanceController, MemoryService
 
 __all__ = ["Collection", "MaintenanceController", "MemoryOp",
-           "MemoryService", "OpFuture"]
+           "MemoryService", "OpFuture", "ResidencyManager"]

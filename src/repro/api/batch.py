@@ -53,6 +53,13 @@ from repro.configs.base import EngineConfig
 from repro.core import index as ivf
 
 
+class NotResident(RuntimeError):
+    """A fused lane's collection was demoted off the device between flush
+    and dispatch — the stacked execution cannot proceed.  The service
+    catches this, re-promotes the lane, and retries (or falls back to
+    per-lane queries, which promote themselves)."""
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "k", "nprobe", "path"))
 def fused_query(stacked: ivf.IVFState, q: jax.Array, cfg: EngineConfig,
                 k: int, nprobe: int, path: str):
@@ -114,6 +121,8 @@ class StackCache:
     def __init__(self, maxsize: int = 4):
         self.maxsize = maxsize
         self._lock = threading.Lock()
+        # key -> (stacked_state, nbytes); nbytes feeds the residency
+        # manager's device-budget accounting (the stacks are device copies)
         self._entries: OrderedDict = OrderedDict()
         # collections evicted via evict(): a fused task already in flight
         # when its tenant was dropped must not re-insert that tenant's
@@ -126,6 +135,8 @@ class StackCache:
         snaps, tag = [], []
         for c in collections:
             state, version = c.versioned_snapshot()
+            if state is None:             # demoted off-device mid-window
+                raise NotResident(c.name)
             snaps.append(state)
             tag.append((c, version))
         key = (mesh, tuple(tag))
@@ -134,19 +145,36 @@ class StackCache:
             if hit is not None:
                 self._entries.move_to_end(key)
                 self.hits += 1
-                return hit
+                return hit[0]
         stacked = _stack(snaps, mesh)
+        nbytes = sum(int(leaf.nbytes) for leaf in jax.tree.leaves(stacked))
         with self._lock:
             self.misses += 1
             # serve but never cache a stack whose tenant was dropped while
             # we built it — caching would resurrect the entry evict()
             # just removed and pin the dropped state
             if not any(c in self._dropped for c in collections):
-                self._entries[key] = stacked
+                self._entries[key] = (stacked, nbytes)
                 self._entries.move_to_end(key)
                 while len(self._entries) > self.maxsize:
                     self._entries.popitem(last=False)
         return stacked
+
+    def device_bytes(self) -> int:
+        """Device bytes the cached stacks pin — charged against the
+        service's residency budget alongside the HOT collections."""
+        with self._lock:
+            return sum(nb for _, nb in self._entries.values())
+
+    def pop_lru(self) -> bool:
+        """Evict the least-recently-used stack; False when empty.  The
+        residency manager drains the cache before demoting a live tenant —
+        a cached stack is a derived copy, strictly cheaper to lose."""
+        with self._lock:
+            if not self._entries:
+                return False
+            self._entries.popitem(last=False)
+            return True
 
     def evict(self, collection) -> None:
         """Drop every entry whose group includes `collection`.
@@ -167,7 +195,9 @@ class StackCache:
     def stats(self) -> dict:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
-                    "entries": len(self._entries)}
+                    "entries": len(self._entries),
+                    "device_bytes": sum(
+                        nb for _, nb in self._entries.values())}
 
 
 def execute_group(collections, queries: List[np.ndarray],
@@ -193,7 +223,11 @@ def execute_group(collections, queries: List[np.ndarray],
     if cache is not None:
         stacked = cache.stacked(collections, mesh)
     else:
-        stacked = _stack([c.snapshot() for c in collections], mesh)
+        snaps = [c.snapshot() for c in collections]
+        for c, s in zip(collections, snaps):
+            if s is None:                 # demoted off-device mid-window
+                raise NotResident(c.name)
+        stacked = _stack(snaps, mesh)
     for c, b in zip(collections, sizes):
         c._bump(queries=b)
     if mesh is not None:

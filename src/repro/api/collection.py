@@ -43,6 +43,7 @@ and can re-pack host-side onto a different mesh (``reshard=True``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -76,7 +77,7 @@ class Collection:
                  spill_capacity: int = 4096,
                  thresholds: Optional[templates.TemplateThresholds] = None,
                  delta_log_capacity: int = 1024,
-                 mesh=None):
+                 mesh=None, _alloc_state: bool = True):
         self.name = name
         self.cfg = cfg
         self.mesh = mesh
@@ -120,7 +121,24 @@ class Collection:
         self._shard_pressure = [{"tombstones": 0, "spilled": 0}
                                 for _ in range(n_shards)]
         self._spill_floors = [0] * n_shards
-        if self.sharded:
+        # Residency tier (see repro.api.residency): "hot" = device state in
+        # _state; "warm" = host numpy state(s) in _host_state (per-shard
+        # local states when sharded); "cold" = checkpoint under _cold_dir
+        # only.  Transitions go through demote()/promote() under the writer
+        # lock; _index_nbytes is the exact static byte size of the device
+        # state (what the budget charges), computed without allocation.
+        self._residency_tier = "hot"
+        self._host_state = None
+        self._cold_dir: Optional[str] = None
+        self._cold_step: Optional[int] = None
+        self._residency_mgr = None     # back-ref set by ResidencyManager
+        self._last_used = time.monotonic()
+        self._index_nbytes = ivf.state_nbytes(cfg, spill_capacity, n_shards)
+        if not _alloc_state:
+            # device-free init for load_from: the loader installs the
+            # restored state (hot) or host/cold residency itself
+            self._state = None
+        elif self.sharded:
             from repro.core import distributed as dce
             self._state = dce.empty_dist_state(cfg, mesh, spill_capacity)
         else:
@@ -142,6 +160,219 @@ class Collection:
             return sum(self._spill_floors)
 
     # ------------------------------------------------------------------
+    # Residency tier (device / host-RAM / disk — see repro.api.residency)
+    # ------------------------------------------------------------------
+    @property
+    def residency(self) -> str:
+        """Current tier: "hot" | "warm" | "cold"."""
+        with self._lock:
+            return self._residency_tier
+
+    def last_used(self) -> float:
+        """monotonic() timestamp of the last query/write — the LRU key."""
+        with self._lock:
+            return self._last_used
+
+    def index_nbytes(self) -> int:
+        """Exact byte size of the device state (static shapes — constant
+        for the collection's lifetime; equals the audited
+        `ivf.footprint(state)["index_bytes"]`)."""
+        return self._index_nbytes
+
+    def _host_view_locked(self):
+        """Host (numpy) representation of the current state; caller holds
+        the writer lock.  Unsharded: one IVFState of numpy arrays.
+        Sharded: the per-shard local states (`distributed.split_host`
+        layout — the same representation sharded persistence writes)."""
+        with self._lock:
+            tier = self._residency_tier
+            state = self._state
+            host = self._host_state
+        if tier == "hot":
+            if self.sharded:
+                from repro.core import distributed as dce
+                return dce.split_host(state, self._n_shards)
+            return jax.tree.map(
+                lambda a: np.asarray(jax.device_get(a)), state)
+        if tier == "warm":
+            return host
+        return self._read_cold_host()
+
+    def _read_cold_host(self):
+        """Load the COLD checkpoint back into host numpy arrays (no device
+        allocation: `Checkpointer.restore` without shardings stays numpy)."""
+        from repro.checkpoint.checkpointer import Checkpointer
+        if self._cold_dir is None:
+            raise RuntimeError(
+                f"collection {self.name!r} is cold but has no checkpoint "
+                "directory — demote(tier='cold') requires one")
+        template = ivf.empty_host_state(self.cfg,
+                                        self.spill_capacity)._asdict()
+        if self.sharded:
+            shards = []
+            for i in range(self._n_shards):
+                ck = Checkpointer(
+                    os.path.join(self._cold_dir, f"shard_{i:03d}"))
+                shards.append(ivf.IVFState(
+                    **ck.restore(template, step=self._cold_step)))
+            return shards
+        ck = Checkpointer(self._cold_dir)
+        return ivf.IVFState(**ck.restore(template, step=self._cold_step))
+
+    def _write_host_state(self, directory: str, host, step: int) -> None:
+        """Write a host view (from `_host_view_locked`) as checkpoint
+        namespaces — one per shard when sharded, matching `save_into`."""
+        from repro.checkpoint.checkpointer import Checkpointer
+        os.makedirs(directory, exist_ok=True)
+        if self.sharded:
+            for i, local in enumerate(host):
+                Checkpointer(os.path.join(
+                    directory, f"shard_{i:03d}")).save(step, local._asdict())
+        else:
+            Checkpointer(directory).save(step, host._asdict())
+
+    def demote(self, tier: str = "warm", *, directory: Optional[str] = None,
+               step: int = 0) -> dict:
+        """Release the device state: "warm" keeps a host-RAM copy, "cold"
+        writes a disk checkpoint (`directory`, or the collection's existing
+        cold namespace) and keeps nothing in memory.
+
+        Serializes through the writer lock, so it can never tear an
+        in-flight write; bumps `_epoch` so an in-flight delta-replay
+        rebuild aborts (its snapshot no longer exists on device) instead of
+        resurrecting the demoted state at its swap.  Queries racing the
+        demotion either grabbed the old snapshot (still valid — the arrays
+        outlive the swap) or re-promote on their next snapshot read.
+        Demoting an already-colder collection is a no-op ("cold" →
+        demote("warm") does NOT load anything back).
+        """
+        if tier not in ("warm", "cold"):
+            raise ValueError(f"demote tier must be 'warm' or 'cold', "
+                             f"got {tier!r}")
+        t0 = time.perf_counter()
+        with self._writer_lock:
+            with self._lock:
+                cur = self._residency_tier
+            if cur == tier or cur == "cold":
+                return {"tier": cur, "demoted": False}
+            host = self._host_view_locked()
+            if tier == "cold":
+                directory = directory or self._cold_dir
+                if directory is None:
+                    raise ValueError(
+                        f"collection {self.name!r}: demote to cold needs a "
+                        "checkpoint directory (configure the service's "
+                        "residency_dir)")
+                self._write_host_state(directory, host, step)
+            with self._lock:
+                self._residency_tier = tier
+                if tier == "warm":
+                    self._host_state = host
+                else:
+                    self._host_state = None
+                    self._cold_dir = directory
+                    self._cold_step = step
+                self._state = None
+                self._version += 1
+                self._epoch += 1    # obsoletes in-flight rebuild snapshots
+                for s in range(self._n_shards):
+                    self._shard_versions[s] += 1
+        out = {"tier": tier, "demoted": True,
+               "demote_s": time.perf_counter() - t0}
+        mgr = self._residency_mgr
+        if mgr is not None:
+            mgr._record_demotion(tier, out["demote_s"])
+        return out
+
+    def promote(self) -> dict:
+        """Bring a WARM/COLD collection back to the device tier (HOT).
+
+        Asks the residency manager (when attached) to make room FIRST —
+        with no collection locks held, so the admission path's victim
+        demotions can never deadlock against us — then rebuilds the device
+        state under the writer lock.  No-op on a HOT collection.
+        """
+        with self._lock:
+            if self._residency_tier == "hot":
+                return {"tier": "hot", "promoted": False}
+        mgr = self._residency_mgr
+        if mgr is not None:
+            mgr.make_room_for(self)
+        t0 = time.perf_counter()
+        try:
+            with self._writer_lock:
+                with self._lock:
+                    tier = self._residency_tier
+                    host = self._host_state
+                if tier == "hot":     # raced another promoter — done
+                    return {"tier": "hot", "promoted": False}
+                if tier == "cold":
+                    host = self._read_cold_host()
+                if self.sharded:
+                    from repro.core import distributed as dce
+                    state = dce.assemble_host(host)
+                else:
+                    state = jax.tree.map(jnp.asarray, host)
+                with self._lock:
+                    self._state = state
+                    self._residency_tier = "hot"
+                    self._host_state = None
+                    self._last_used = time.monotonic()
+                    self._version += 1
+                    for s in range(self._n_shards):
+                        self._shard_versions[s] += 1
+        finally:
+            if mgr is not None:
+                mgr.finish_admit(self)
+        out = {"tier": "hot", "promoted": True,
+               "promote_s": time.perf_counter() - t0}
+        if mgr is not None:
+            mgr._record_promotion(out["promote_s"])
+        return out
+
+    def _acquire_writer_hot(self) -> None:
+        """Acquire the writer lock with the collection HOT.
+
+        Promote happens BEFORE the lock acquisition (admission takes victim
+        writer locks — taking ours first would invert the lock order); if a
+        concurrent eviction demoted us between the promote and the acquire,
+        release and retry.  Terminates because evictions only happen on
+        other tenants' admissions, which are finite between our retries.
+        """
+        while True:
+            self.promote()
+            self._writer_lock.acquire()
+            with self._lock:
+                if self._residency_tier == "hot":
+                    return
+            self._writer_lock.release()
+
+    @contextlib.contextmanager
+    def _hot_writer(self):
+        self._acquire_writer_hot()
+        try:
+            yield
+        finally:
+            self._writer_lock.release()
+
+    def _query_state(self) -> ivf.IVFState:
+        """Snapshot for the query path: wait-free on a HOT collection,
+        promotes first otherwise (the cold-hit path).  Under adversarial
+        eviction thrash, falls back to pinning hotness with the writer
+        lock for the pointer read — bounded, and only ever on a collection
+        that was demoted multiple times mid-query."""
+        for _ in range(4):
+            with self._lock:
+                if self._residency_tier == "hot":
+                    self._last_used = time.monotonic()
+                    return self._state
+            self.promote()
+        with self._hot_writer():
+            with self._lock:
+                self._last_used = time.monotonic()
+                return self._state
+
+    # ------------------------------------------------------------------
     # Versioned state snapshot
     # ------------------------------------------------------------------
     @property
@@ -153,6 +384,8 @@ class Collection:
     def state(self, value: ivf.IVFState) -> None:
         with self._lock:
             self._state = value
+            self._residency_tier = "hot"
+            self._host_state = None
             self._version += 1
 
     def snapshot(self) -> ivf.IVFState:
@@ -206,6 +439,9 @@ class Collection:
         correct for whole-state writes like build/insert/delete)."""
         with self._lock:
             self._state = state
+            self._residency_tier = "hot"
+            self._host_state = None
+            self._last_used = time.monotonic()
             self._version += 1
             for s in (range(self._n_shards) if shards is None else shards):
                 self._shard_versions[s] += 1
@@ -232,6 +468,7 @@ class Collection:
 
     def _bump(self, **deltas) -> None:
         with self._lock:
+            self._last_used = time.monotonic()
             for key, d in deltas.items():
                 self.counters[key] += d
 
@@ -300,6 +537,19 @@ class Collection:
         self._check_shardable("build", int(x.shape[0]))
         ids = self._ids_for(x.shape[0], ids)
         t0 = time.perf_counter()
+        # a build replaces the whole state from scratch — no need to promote
+        # a demoted one first, but the fresh device state must be admitted
+        # against the residency budget (same shapes, same byte charge)
+        mgr = self._residency_mgr
+        if mgr is not None:
+            mgr.make_room_for(self)
+        try:
+            return self._build_admitted(x, ids, t0)
+        finally:
+            if mgr is not None:
+                mgr.finish_admit(self)
+
+    def _build_admitted(self, x, ids, t0) -> dict:
         with self._writer_lock:
             if self.sharded:
                 from repro.core import distributed as dce
@@ -339,7 +589,7 @@ class Collection:
         x = jnp.asarray(vectors, jnp.float32)
         self._check_shardable("insert", int(x.shape[0]))
         ids = self._ids_for(x.shape[0], ids)
-        with self._writer_lock:
+        with self._hot_writer():
             if self.sharded:
                 from repro.core import distributed as dce
                 state, spilled_shards = dce.dist_insert(self._state, x, ids,
@@ -369,7 +619,7 @@ class Collection:
         masks its own slots, no collectives) and the per-shard hit counts
         feed per-shard maintenance pressure."""
         ids = jnp.asarray(np.atleast_1d(np.asarray(ids)), jnp.int32)
-        with self._writer_lock:
+        with self._hot_writer():
             if self.sharded:
                 from repro.core import distributed as dce
                 state, hits = dce.dist_delete(self._state, ids, self.mesh)
@@ -392,15 +642,18 @@ class Collection:
         """Returns (ids i32[B, k], scores f32[B, k]).  Template-routed;
         `path` ("probed" | "full_scan") overrides the router (benchmarks).
 
-        Wait-free w.r.t. writers: reads the current snapshot under the tiny
-        pointer lock and never takes the writer lock — a stalled insert or
-        in-flight rebuild cannot add to query latency.  Blocks only for its
-        own device compute (result is synced to host)."""
+        Wait-free w.r.t. writers on a HOT collection: reads the current
+        snapshot under the tiny pointer lock and never takes the writer
+        lock — a stalled insert or in-flight rebuild cannot add to query
+        latency.  On a WARM/COLD collection this is the cold-hit path: the
+        state promotes back to device first (`promote()` — the service
+        surfaces that latency separately), then the query runs as usual.
+        Blocks only for its own device compute (result is synced to host).
+        """
         q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
         k, nprobe, path = self.resolve_query(q.shape[0], k, nprobe, path)
-        with self._lock:
-            state = self._state
-            self.counters["queries"] += int(q.shape[0])
+        state = self._query_state()
+        self._bump(queries=int(q.shape[0]))
         if self.sharded:
             from repro.core import distributed as dce
             ids, scores = dce.dist_query(state, q, self.cfg, self.mesh, k)
@@ -461,7 +714,10 @@ class Collection:
             restarts = 0
             while True:
                 exclusive = restarts >= max_restarts
-                self._writer_lock.acquire()
+                # promote-then-acquire: a demoted collection has no device
+                # state to rebuild (and a demotion mid-rebuild bumps _epoch,
+                # aborting us at the publish step like a bulk build would)
+                self._acquire_writer_hot()
                 snap = self._state
                 epoch = self._epoch
                 if not exclusive:
@@ -541,7 +797,10 @@ class Collection:
             restarts = 0
             while True:
                 exclusive = restarts >= max_restarts
-                self._writer_lock.acquire()
+                # promote-then-acquire: a demoted collection has no device
+                # state to rebuild (and a demotion mid-rebuild bumps _epoch,
+                # aborting us at the publish step like a bulk build would)
+                self._acquire_writer_hot()
                 snap = self._state
                 epoch = self._epoch
                 if not exclusive:
@@ -591,19 +850,123 @@ class Collection:
                         merged, extra, tombstoned = dce.dist_replay(
                             merged, log, shard, self.cfg, self.mesh)
                     jax.block_until_ready(merged.lists)
+                    # Spill rebalance: rows this rebuild could not drain
+                    # (the shard's lists are full) move to an underfull
+                    # sibling's spill buffer, so effective capacity is not
+                    # bounded by the fullest shard.  The sibling's spill
+                    # pressure rises accordingly, which is what wires the
+                    # warm-up behind maintenance_due_shards(): its next
+                    # (auto-)rebuild drains the moved rows into its free
+                    # list slots.  Runs under the writer lock we hold.
+                    moved, moved_to = 0, None
+                    if spilled + extra > 0:
+                        merged, moved, moved_to = self._rebalance_spill_host(
+                            merged, shard)
                     with self._lock:
                         self._shard_pressure[shard] = {
                             "tombstones": tombstoned,
-                            "spilled": spilled + extra}
-                        self._spill_floors[shard] = spilled
+                            "spilled": max(spilled + extra - moved, 0)}
+                        self._spill_floors[shard] = max(spilled - moved, 0)
+                        if moved_to is not None:
+                            self._shard_pressure[moved_to]["spilled"] += moved
                     spilled += extra
-                    self._swap(merged, shards=(shard,), rebuilds=1)
+                    bump = (shard,) if moved_to is None else (shard, moved_to)
+                    self._swap(merged, shards=bump, rebuilds=1)
                     return {"rebuild_s": time.perf_counter() - t0,
                             "spilled": spilled, "replayed": replayed,
                             "restarts": restarts, "aborted": False,
-                            "shard": shard}
+                            "shard": shard, "rebalanced": moved,
+                            "rebalance_to": moved_to}
                 finally:
                     self._writer_lock.release()
+
+    def _rebalance_spill_host(self, state, src: int):
+        """Move shard `src`'s live spill rows to an underfull sibling.
+
+        Host-side (split → move → assemble; this is background maintenance,
+        not a hot path).  The destination is the sibling with the most free
+        list slots (it can actually absorb the rows at its next rebuild)
+        among those with spill room; rows move with their per-row quantized
+        sideband, and `src`'s spill buffer is compacted — tombstoned spill
+        slots vanish, so `num_deleted` drops by the reclaimed count.
+
+        Caller holds the writer lock.  A sibling whose own rebuild is
+        mid-recompute (`_rebuild_locks[j]` held) is skipped: its publish
+        step adopts a rebuilt slice computed from a pre-move snapshot,
+        which would silently drop rows we moved into it.  A sibling rebuild
+        *starting* after this check blocks on the writer lock we hold, so
+        its snapshot will include the moved rows.
+
+        Returns (new_state, moved_rows, dst_shard) — (state, 0, None) when
+        there is nothing to move or nowhere to put it.
+        """
+        from repro.core import distributed as dce
+        if self._n_shards < 2:
+            return state, 0, None
+        shards = dce.split_host(state, self._n_shards)
+        s = shards[src]
+        cap = int(s.spill_ids.shape[0])
+        n_src = int(s.spill_size)
+        live = np.nonzero(np.asarray(s.spill_ids)[:n_src] >= 0)[0]
+        if len(live) == 0:
+            return state, 0, None
+        dst, dst_key = None, None
+        for j, t in enumerate(shards):
+            if j == src or self._rebuild_locks[j].locked():
+                continue
+            free_spill = cap - int(t.spill_size)
+            if free_spill <= 0:
+                continue
+            free_lists = (t.list_ids.shape[0] * t.list_ids.shape[1]
+                          - int(np.sum(np.asarray(t.list_sizes))))
+            key = (free_lists, free_spill)
+            if dst is None or key > dst_key:
+                dst, dst_key = j, key
+        if dst is None:
+            return state, 0, None
+        d = shards[dst]
+        n_dst = int(d.spill_size)
+        m = int(min(len(live), cap - n_dst))
+        take, keep = live[:m], live[m:]
+        dead = n_src - len(live)     # tombstoned spill slots compacted away
+
+        def pack_src(a, fill=0):
+            a = np.asarray(a)
+            out = np.full_like(a, fill)
+            out[:len(keep)] = a[keep]
+            return out
+
+        def grow_dst(a, rows):
+            a = np.asarray(a).copy()
+            a[n_dst:n_dst + m] = rows
+            return a
+
+        s_new = s._replace(
+            spill=pack_src(s.spill),
+            spill_ids=pack_src(s.spill_ids, fill=-1),
+            spill_size=np.asarray(len(keep), np.int32),
+            num_deleted=np.asarray(int(s.num_deleted) - dead, np.int32))
+        d_new = d._replace(
+            spill=grow_dst(d.spill, np.asarray(s.spill)[take]),
+            spill_ids=grow_dst(d.spill_ids, np.asarray(s.spill_ids)[take]),
+            spill_size=np.asarray(n_dst + m, np.int32))
+        if s.q_spill is not None:
+            # per-row affine sideband rides along with its rows
+            s_new = s_new._replace(
+                q_spill=pack_src(s.q_spill),
+                q_spill_scales=pack_src(s.q_spill_scales, fill=1.0),
+                q_spill_zeros=pack_src(s.q_spill_zeros),
+                q_spill_norms=pack_src(s.q_spill_norms))
+            d_new = d_new._replace(
+                q_spill=grow_dst(d.q_spill, np.asarray(s.q_spill)[take]),
+                q_spill_scales=grow_dst(d.q_spill_scales,
+                                        np.asarray(s.q_spill_scales)[take]),
+                q_spill_zeros=grow_dst(d.q_spill_zeros,
+                                       np.asarray(s.q_spill_zeros)[take]),
+                q_spill_norms=grow_dst(d.q_spill_norms,
+                                       np.asarray(s.q_spill_norms)[take]))
+        shards[src], shards[dst] = s_new, d_new
+        return dce.assemble_host(shards), m, dst
 
     # ------------------------------------------------------------------
     # Maintenance pressure (consumed by the service's MaintenanceController)
@@ -641,7 +1004,10 @@ class Collection:
         """Shard ids whose tombstone/spill pressure crosses the collection's
         thresholds — each is worth an independent shard-local rebuild.
         Unsharded collections report `[0]` when due (the single shard)."""
-        if not self._built:
+        if not self._built or self.residency != "hot":
+            # a demoted collection has no device state to compact; promoting
+            # it just to rebuild would fight the eviction policy — pressure
+            # keeps accruing and is served once a query promotes it
             return []
         tomb_limit, spill_limit = self._maintenance_limits()
         with self._lock:
@@ -703,11 +1069,34 @@ class Collection:
         pressure()` instead on hot paths."""
         with self._lock:
             state = self._state
+            tier = self._residency_tier
+            host = self._host_state
             counters = dict(self.counters)
             version = self._version
             shard_versions = list(self._shard_versions)
             pressure = [dict(p) for p in self._shard_pressure]
-        if self.sharded:
+        if tier != "hot":
+            # no device state to sync; sizes are static, occupancy comes
+            # from the host copy when one is in RAM (cold = disk only)
+            s = {"n_clusters": self.cfg.n_clusters, "dim": self.cfg.dim,
+                 "list_capacity": self.cfg.list_capacity,
+                 "index_bytes": self._index_nbytes,
+                 "bytes_per_row": self.cfg.dim * (5 if self.cfg.quantized
+                                                  else 4),
+                 "scan_bytes_per_row": self.cfg.dim * (
+                     1 if self.cfg.quantized else 4),
+                 "store_dtype": self.cfg.store_dtype}
+            if tier == "warm" and host is not None:
+                locals_ = host if self.sharded else [host]
+                s["live"] = int(sum(
+                    np.sum(np.asarray(t.list_ids) >= 0)
+                    + np.sum(np.asarray(t.spill_ids) >= 0) for t in locals_))
+                s["spill"] = int(sum(int(t.spill_size) for t in locals_))
+                s["deleted"] = int(sum(int(t.num_deleted) for t in locals_))
+            if self.sharded:
+                s["shards"] = self._n_shards
+                s["shard_versions"] = shard_versions
+        elif self.sharded:
             s = {"n_clusters": state.n_clusters, "dim": state.dim,
                  "list_capacity": state.list_capacity,
                  "live": int(jax.device_get(ivf.live_count(state))),
@@ -720,6 +1109,7 @@ class Collection:
             s = ivf.stats(state)
         s.update(counters)
         s["version"] = version
+        s["residency"] = tier
         s["pressure"] = {"tombstones": sum(p["tombstones"] for p in pressure),
                          "spilled": sum(p["spilled"] for p in pressure),
                          "shards": pressure}
@@ -736,27 +1126,32 @@ class Collection:
         shard's local `IVFState`) plus the mesh axis names/shape in the
         metadata so `load_from` can verify — or host-reshard — the layout.
         Reads a consistent snapshot; safe to call under live traffic.
+
+        Residency round-trips: the metadata records the tier (and the
+        host-side pressure counters, since a demoted collection has no
+        device scalars to re-derive them from), and a WARM/COLD collection
+        saves from its host copy / cold checkpoint without ever touching
+        the device — COLD really is just "checkpointed + not loaded".
         """
-        from repro.checkpoint.checkpointer import Checkpointer
         os.makedirs(directory, exist_ok=True)
-        with self._lock:
-            state = self._state
-            meta = {"name": self.name, "next_id": self._next_id,
-                    "counters": dict(self.counters), "built": self._built,
-                    "spill_capacity": self.spill_capacity, "step": step,
-                    "spill_floors": list(self._spill_floors),
-                    "store_dtype": self.cfg.store_dtype}
-        if self.sharded:
-            from repro.core import distributed as dce
-            meta["sharded"] = True
-            meta["mesh_axes"] = list(self.mesh.axis_names)
-            meta["mesh_shape"] = [int(self.mesh.shape[a])
-                                  for a in self.mesh.axis_names]
-            for i, local in enumerate(dce.split_host(state, self._n_shards)):
-                Checkpointer(os.path.join(directory, f"shard_{i:03d}")).save(
-                    step, local._asdict())
-        else:
-            Checkpointer(directory).save(step, state._asdict())
+        with self._writer_lock:
+            with self._lock:
+                tier = self._residency_tier
+                meta = {"name": self.name, "next_id": self._next_id,
+                        "counters": dict(self.counters),
+                        "built": self._built,
+                        "spill_capacity": self.spill_capacity, "step": step,
+                        "spill_floors": list(self._spill_floors),
+                        "store_dtype": self.cfg.store_dtype,
+                        "residency": tier,
+                        "pressure": [dict(p) for p in self._shard_pressure]}
+            if self.sharded:
+                meta["sharded"] = True
+                meta["mesh_axes"] = list(self.mesh.axis_names)
+                meta["mesh_shape"] = [int(self.mesh.shape[a])
+                                      for a in self.mesh.axis_names]
+            host = self._host_view_locked()
+            self._write_host_state(directory, host, step)
         atomic_write_json(os.path.join(directory, META_FILE), meta)
 
     @classmethod
@@ -785,47 +1180,82 @@ class Collection:
         saved_dtype = meta.get("store_dtype")
         if saved_dtype is not None and saved_dtype != cfg.store_dtype:
             cfg = dataclasses.replace(cfg, store_dtype=saved_dtype)
-        coll = cls(name, cfg, spill_capacity=spill_capacity, **kw)
+        residency = meta.get("residency", "hot")
+        # never pre-allocate device arrays: a HOT load installs the restored
+        # state, a WARM/COLD load must stay device-free entirely
+        coll = cls(name, cfg, spill_capacity=spill_capacity,
+                   _alloc_state=False, **kw)
         if bool(meta.get("sharded", False)) != coll.sharded:
             saved = "sharded" if meta.get("sharded") else "unsharded"
             raise ValueError(
                 f"collection {name!r} was saved {saved} (mesh "
                 f"{meta.get('mesh_shape')}); load it with a matching "
                 "EngineConfig.shard_db and, when sharded, a mesh= kwarg")
+        resharded = False
+        template = ivf.empty_host_state(cfg, spill_capacity)._asdict()
         if coll.sharded:
             from repro.core import distributed as dce
             saved_shape = [int(v) for v in meta["mesh_shape"]]
             cur_shape = [int(coll.mesh.shape[a])
                          for a in coll.mesh.axis_names]
             n_saved = int(np.prod(saved_shape))
-            shards = []
-            template = ivf.empty_state(cfg, spill_capacity)._asdict()
-            for i in range(n_saved):
-                ck = Checkpointer(os.path.join(directory, f"shard_{i:03d}"))
-                shards.append(ivf.IVFState(**ck.restore(template, step=step)))
-            if cur_shape == saved_shape:
-                coll.state = dce.assemble_host(shards)
-                floors = meta.get("spill_floors", [0] * n_saved)
-            elif reshard:
-                shards = dce.reshard_host(shards, cfg, coll.mesh.size,
-                                          spill_capacity)
-                coll.state = dce.assemble_host(shards)
-                # re-packed layout: old per-shard floors are meaningless;
-                # the next rebuild per shard re-establishes them
-                floors = [0] * coll.mesh.size
-            else:
+            if cur_shape != saved_shape and not reshard:
                 raise ValueError(
                     f"collection {name!r} was saved on mesh "
                     f"{dict(zip(meta['mesh_axes'], saved_shape))} but is "
                     f"being loaded on mesh shape {cur_shape}; pass "
                     "reshard=True to re-pack the rows host-side onto the "
                     "new mesh")
+            if cur_shape != saved_shape:
+                # resharding re-packs rows through the device insert kernel;
+                # the re-packed state can only materialize HOT
+                resharded, residency = True, "hot"
+            if residency == "cold":
+                # COLD = checkpointed + not loaded: adopt the namespace as
+                # the cold checkpoint, touch no array data at all
+                coll._cold_dir = directory
+                coll._cold_step = step
+                with coll._lock:
+                    coll._residency_tier = "cold"
+                floors = meta.get("spill_floors", [0] * n_saved)
+            else:
+                shards = []
+                for i in range(n_saved):
+                    ck = Checkpointer(
+                        os.path.join(directory, f"shard_{i:03d}"))
+                    shards.append(
+                        ivf.IVFState(**ck.restore(template, step=step)))
+                if resharded:
+                    shards = dce.reshard_host(shards, cfg, coll.mesh.size,
+                                              spill_capacity)
+                    # re-packed layout: old per-shard floors are
+                    # meaningless; the next rebuild re-establishes them
+                    floors = [0] * coll.mesh.size
+                else:
+                    floors = meta.get("spill_floors", [0] * n_saved)
+                if residency == "warm":
+                    with coll._lock:
+                        coll._host_state = shards
+                        coll._residency_tier = "warm"
+                else:
+                    coll.state = dce.assemble_host(shards)
         else:
-            restored = Checkpointer(directory).restore(
-                coll.state._asdict(), step=step)
-            coll.state = ivf.IVFState(**{
-                k: jnp.asarray(v) if v is not None else None
-                for k, v in restored.items()})
+            if residency == "cold":
+                coll._cold_dir = directory
+                coll._cold_step = step
+                with coll._lock:
+                    coll._residency_tier = "cold"
+            else:
+                restored = Checkpointer(directory).restore(template,
+                                                           step=step)
+                if residency == "warm":
+                    with coll._lock:
+                        coll._host_state = ivf.IVFState(**restored)
+                        coll._residency_tier = "warm"
+                else:
+                    coll.state = ivf.IVFState(**{
+                        k: jnp.asarray(v) if v is not None else None
+                        for k, v in restored.items()})
             floors = meta.get("spill_floors")
             if floors is None:   # pre-sharding snapshots: scalar field
                 floors = [int(meta.get("spill_floor", 0))]
@@ -834,16 +1264,28 @@ class Collection:
         coll._built = bool(meta.get("built", True))
         coll._next_id = int(meta.get("next_id", 0))
         coll.counters.update(meta.get("counters", {}))
-        # re-seed maintenance pressure from the restored state so a reload
-        # doesn't silently forget accumulated tombstones/spill; the spill
-        # floor survives the round-trip so known-irreducible spill doesn't
-        # auto-trigger a futile rebuild on every restart
-        st = coll.state
-        deleted = np.atleast_1d(np.asarray(jax.device_get(st.num_deleted)))
-        spill = np.atleast_1d(np.asarray(jax.device_get(st.spill_size)))
-        coll._shard_pressure = [{"tombstones": int(deleted[s]),
-                                 "spilled": int(spill[s])}
-                                for s in range(coll._n_shards)]
+        # re-seed maintenance pressure so a reload doesn't silently forget
+        # accumulated tombstones/spill: newer snapshots persist the host
+        # counters (a demoted collection has no device scalars to read);
+        # older ones — always HOT — re-derive them from the device state.
+        # The spill floor survives the round-trip so known-irreducible
+        # spill doesn't auto-trigger a futile rebuild on every restart.
+        press = None if resharded else meta.get("pressure")
+        if press is not None:
+            press = [{"tombstones": int(p.get("tombstones", 0)),
+                      "spilled": int(p.get("spilled", 0))} for p in press]
+            press = press[:coll._n_shards]
+            press += [{"tombstones": 0, "spilled": 0}
+                      for _ in range(coll._n_shards - len(press))]
+            coll._shard_pressure = press
+        else:
+            st = coll.state
+            deleted = np.atleast_1d(np.asarray(
+                jax.device_get(st.num_deleted)))
+            spill = np.atleast_1d(np.asarray(jax.device_get(st.spill_size)))
+            coll._shard_pressure = [{"tombstones": int(deleted[s]),
+                                     "spilled": int(spill[s])}
+                                    for s in range(coll._n_shards)]
         coll._spill_floors = [int(f) for f in floors][:coll._n_shards]
         coll._spill_floors += [0] * (coll._n_shards - len(coll._spill_floors))
         return coll

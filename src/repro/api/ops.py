@@ -16,7 +16,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
-OP_KINDS = ("build", "insert", "delete", "query", "rebuild")
+OP_KINDS = ("build", "insert", "delete", "query", "rebuild",
+            "promote", "demote")
 
 
 @dataclass
@@ -24,7 +25,7 @@ class MemoryOp:
     """One memory operation against one named collection.
 
     payload: vectors for build/insert, queries for query, ids for delete,
-             None for rebuild.
+             None for rebuild/promote/demote.
     ids:     explicit external ids for build/insert (else auto-assigned).
     k / nprobe / path: query parameters (None = collection defaults; `path`
              overrides the template router, as in the benchmarks).
@@ -34,6 +35,9 @@ class MemoryOp:
              it can fuse with same-signature queries from other collections.
     shard:   rebuild only — compact just this mesh shard of a sharded
              collection (shard-local maintenance); None rebuilds them all.
+    tier:    demote only — target residency tier: "warm" (host RAM, the
+             default) or "cold" (disk checkpoint).  Promote always targets
+             the device tier ("hot"), so it takes no tier.
     """
 
     kind: str
@@ -46,6 +50,7 @@ class MemoryOp:
     concurrent: bool = False
     batch: bool = False
     shard: Optional[int] = None
+    tier: Optional[str] = None
 
     def __post_init__(self):
         if self.kind not in OP_KINDS:
@@ -55,6 +60,12 @@ class MemoryOp:
             raise ValueError("batch=True is only meaningful for queries")
         if self.shard is not None and self.kind != "rebuild":
             raise ValueError("shard= is only meaningful for rebuild ops")
+        if self.tier is not None:
+            if self.kind != "demote":
+                raise ValueError("tier= is only meaningful for demote ops")
+            if self.tier not in ("warm", "cold"):
+                raise ValueError(f"demote tier must be 'warm' or 'cold', "
+                                 f"got {self.tier!r}")
 
     @property
     def batch_size(self) -> int:

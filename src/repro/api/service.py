@@ -45,6 +45,7 @@ import numpy as np
 from repro.api import batch as fuse
 from repro.api.collection import Collection, atomic_write_json
 from repro.api.ops import MemoryOp, OpFuture
+from repro.api.residency import ResidencyManager
 from repro.configs.base import EngineConfig
 from repro.core import templates
 from repro.core.scheduler import Task, WindowedScheduler
@@ -76,11 +77,14 @@ class MaintenanceController:
         self.failure_backoff_s = failure_backoff_s
         self._stop = threading.Event()
         self._lock = threading.Lock()
-        # keyed by (collection, shard); shard is None for unsharded tenants
-        self._inflight: Dict[Tuple[str, Optional[int]], OpFuture] = {}
+        # keyed by (collection, slot): slot is the shard id for rebuilds
+        # (None for unsharded tenants) or "demote:<tier>" for residency
+        # demotions — each slot has at most one op in flight
+        self._inflight: Dict[Tuple[str, object], OpFuture] = {}
         # persistent rebuild failures must not re-submit every poll
-        self._backoff_until: Dict[Tuple[str, Optional[int]], float] = {}
+        self._backoff_until: Dict[Tuple[str, object], float] = {}
         self.triggered = 0
+        self.demotions_triggered = 0
         self.failed = 0
         self.last_error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._run,
@@ -96,51 +100,74 @@ class MaintenanceController:
                     self.failed += 1
                     self.last_error = e
 
+    def _try_submit(self, key: Tuple[str, object], op: MemoryOp) -> bool:
+        """Reserve slot `key` and submit `op` through the service.
+
+        At most one in-flight op per slot; a finished-with-error slot backs
+        off before re-submitting.  Safe to race with other pollers: the
+        slot is reserved (value None) under the lock before the submit, so
+        a slot never gets two concurrent ops.  Returns True iff submitted.
+        """
+        with self._lock:
+            if key in self._inflight:
+                fut = self._inflight[key]
+                # None = another poller reserved the slot mid-submit
+                if fut is None or not fut.done():
+                    return False          # one in-flight op per slot
+                self._inflight.pop(key)
+                if fut._error is not None:
+                    self.failed += 1
+                    self.last_error = fut._error
+                    self._backoff_until[key] = (
+                        time.monotonic() + self.failure_backoff_s)
+            if time.monotonic() < self._backoff_until.get(key, 0.0):
+                return False              # failing slot: wait out backoff
+            self._inflight[key] = None
+        try:
+            fut = self._service.submit(op)
+        except BaseException as e:  # noqa: BLE001 — release the slot
+            with self._lock:
+                self._inflight.pop(key, None)
+                if not isinstance(e, KeyError):
+                    self.failed += 1
+                    self.last_error = e
+                    self._backoff_until[key] = (
+                        time.monotonic() + self.failure_backoff_s)
+            return False
+        with self._lock:
+            self._inflight[key] = fut
+        return True
+
     def poll_once(self) -> int:
-        """One maintenance sweep; returns the number of rebuilds scheduled.
-        (Also callable directly — tests and cron-style drivers; safe to race
-        with the daemon poll: the slot is reserved under the lock before the
-        submit, so a (collection, shard) never gets two concurrent
-        rebuilds.)"""
+        """One maintenance sweep; returns the number of ops scheduled
+        (shard-local rebuilds from tombstone/spill pressure, plus
+        background residency demotions of idle or over-budget tenants).
+        Also callable directly — tests and cron-style drivers; safe to
+        race with the daemon poll (see `_try_submit`)."""
         n = 0
         for name in self._service.list_collections():
             try:
                 coll = self._service.collection(name)
             except KeyError:
                 continue                  # dropped between list and poll
-            due = coll.maintenance_due_shards()
-            for shard in due:
+            for shard in coll.maintenance_due_shards():
                 key = (name, shard if coll.sharded else None)
-                with self._lock:
-                    if key in self._inflight:
-                        fut = self._inflight[key]
-                        # None = another poller reserved the slot mid-submit
-                        if fut is None or not fut.done():
-                            continue      # one in-flight rebuild per slot
-                        self._inflight.pop(key)
-                        if fut._error is not None:
-                            self.failed += 1
-                            self.last_error = fut._error
-                            self._backoff_until[key] = (
-                                time.monotonic() + self.failure_backoff_s)
-                    if time.monotonic() < self._backoff_until.get(key, 0.0):
-                        continue          # failing rebuild: wait out backoff
-                    self._inflight[key] = None
-                try:
-                    fut = self._service.submit(
-                        MemoryOp("rebuild", name, shard=key[1]))
-                except BaseException as e:  # noqa: BLE001 — release the slot
+                if self._try_submit(key, MemoryOp("rebuild", name,
+                                                  shard=key[1])):
                     with self._lock:
-                        self._inflight.pop(key, None)
-                        if not isinstance(e, KeyError):
-                            self.failed += 1
-                            self.last_error = e
-                            self._backoff_until[key] = (
-                                time.monotonic() + self.failure_backoff_s)
-                    continue
+                        self.triggered += 1
+                    n += 1
+        # residency sweep: the manager names (collection, target-tier)
+        # pairs that should drain off the device tier in the background —
+        # HOT tenants idle past idle_demote_s, WARM ones idle past
+        # cold_after_s, and LRU tenants while the device tier is over
+        # budget.  Each rides the scheduler as an ordinary demote op.
+        residency = self._service.residency
+        for name, tier in residency.demotion_due():
+            key = (name, f"demote:{tier}")
+            if self._try_submit(key, MemoryOp("demote", name, tier=tier)):
                 with self._lock:
-                    self._inflight[key] = fut
-                    self.triggered += 1
+                    self.demotions_triggered += 1
                 n += 1
         return n
 
@@ -149,13 +176,18 @@ class MaintenanceController:
         self._thread.join(timeout=timeout)
 
     @staticmethod
-    def _slot_name(key: Tuple[str, Optional[int]]) -> str:
-        name, shard = key
-        return name if shard is None else f"{name}[shard {shard}]"
+    def _slot_name(key: Tuple[str, object]) -> str:
+        name, slot = key
+        if slot is None:
+            return name
+        if isinstance(slot, str):         # "demote:<tier>" residency slot
+            return f"{name}[{slot}]"
+        return f"{name}[shard {slot}]"
 
     def stats(self) -> dict:
         with self._lock:
             return {"triggered": self.triggered, "failed": self.failed,
+                    "demotions_triggered": self.demotions_triggered,
                     "inflight": sorted(
                         self._slot_name(k) for k, f in self._inflight.items()
                         if f is None or not f.done()),
@@ -183,7 +215,11 @@ class MemoryService:
 
     def __init__(self, *, scheduler: Optional[WindowedScheduler] = None,
                  batch_window: int = 8, maintenance: bool = True,
-                 maintenance_poll_interval_s: float = 0.05):
+                 maintenance_poll_interval_s: float = 0.05,
+                 device_budget_bytes: Optional[int] = None,
+                 residency_dir: Optional[str] = None,
+                 idle_demote_s: Optional[float] = None,
+                 cold_after_s: Optional[float] = None):
         self._scheduler = scheduler
         self._own_scheduler = scheduler is None
         self.batch_window = batch_window
@@ -193,9 +229,22 @@ class MemoryService:
         # reuses stacked fused-group states while lane versions are
         # unchanged (see repro.api.batch.StackCache)
         self._stack_cache = fuse.StackCache()
+        # device-residency manager: every collection registers with it;
+        # device_budget_bytes caps the HOT tier (None = unbounded),
+        # residency_dir enables the COLD disk tier, idle_demote_s /
+        # cold_after_s drive background idle demotion via the maintenance
+        # poll (see repro.api.residency)
+        self._residency = ResidencyManager(
+            device_budget_bytes=device_budget_bytes,
+            spill_dir=residency_dir, idle_demote_s=idle_demote_s,
+            cold_after_s=cold_after_s, cache=self._stack_cache)
         self._maintenance_enabled = maintenance
         self._maintenance_poll_interval_s = maintenance_poll_interval_s
         self._maintenance: Optional[MaintenanceController] = None
+
+    @property
+    def residency(self) -> ResidencyManager:
+        return self._residency
 
     @property
     def maintenance(self) -> Optional[MaintenanceController]:
@@ -234,6 +283,7 @@ class MemoryService:
                               spill_capacity=spill_capacity,
                               thresholds=thresholds, mesh=mesh)
             self._collections[name] = coll
+        self._residency.register(coll)
         self._ensure_maintenance()
         return coll
 
@@ -252,6 +302,7 @@ class MemoryService:
             # a cached fused-group stack holds a full copy of the dropped
             # tenant's state — release it now, not at LRU churn
             self._stack_cache.evict(coll)
+            self._residency.forget(coll)
 
     def list_collections(self) -> List[str]:
         with self._lock:
@@ -296,8 +347,7 @@ class MemoryService:
         fut.task = self.scheduler.submit(task)
         return fut
 
-    @staticmethod
-    def _execute(coll: Collection, op: MemoryOp):
+    def _execute(self, coll: Collection, op: MemoryOp):
         if op.kind == "build":
             return coll.build(op.payload, ids=op.ids)
         if op.kind == "insert":
@@ -305,10 +355,21 @@ class MemoryService:
         if op.kind == "delete":
             return coll.delete(op.payload if op.ids is None else op.ids)
         if op.kind == "query":
+            # async promotion: a query against a non-HOT tenant chains
+            # promote -> query inside this ONE task (never two chained
+            # scheduler tasks — with one worker per backend class that
+            # could deadlock).  ensure_hot also times the promotion so
+            # cold-hit latency is visible separately in residency stats.
+            self._residency.ensure_hot(coll)
             return coll.query(op.payload, k=op.k, nprobe=op.nprobe,
                               path=op.path)
         if op.kind == "rebuild":
             return coll.rebuild(shard=op.shard)
+        if op.kind == "promote":
+            self._residency.ensure_hot(coll)
+            return coll.residency
+        if op.kind == "demote":
+            return self._residency.demote(coll, tier=op.tier or "warm")
         raise ValueError(f"unknown op kind {op.kind!r}")
 
     # ------------------------------------------------------------------
@@ -363,17 +424,40 @@ class MemoryService:
         n = 0
         for sig, ops in groups.items():
             cfg, _dtype, _spill, mesh, k, nprobe, path = sig
+            # residency split: fusion only stacks HOT lanes — a non-HOT
+            # lane's state is off-device, and blocking the whole fused
+            # dispatch on its (possibly disk-reading) promotion would make
+            # every hot tenant in the group pay the cold tenant's latency.
+            # Non-HOT ops dispatch as singletons that promote themselves.
+            hot, demoted = [], []
+            for op, fut in ops:
+                try:
+                    resident = (self.collection(op.collection).residency
+                                == "hot")
+                except BaseException as e:  # noqa: BLE001 — dropped tenant
+                    fut._set_error(e)
+                    continue
+                (hot if resident else demoted).append((op, fut))
+            for op, fut in demoted:
+                try:
+                    self._submit_single_query(op, fut, k, nprobe, path)
+                    n += 1
+                except BaseException as e:  # noqa: BLE001
+                    if not fut.done():
+                        fut._set_error(e)
+            if not hot:
+                continue
             try:
-                if len(ops) == 1:
+                if len(hot) == 1:
                     # a lone op has nothing to fuse with — ordinary per-op
                     # scheduler path (sharded ops included: dist_query)
-                    op, fut = ops[0]
+                    op, fut = hot[0]
                     self._submit_single_query(op, fut, k, nprobe, path)
                 else:
-                    self._submit_fused(ops, cfg, k, nprobe, path, mesh=mesh)
+                    self._submit_fused(hot, cfg, k, nprobe, path, mesh=mesh)
                 n += 1
             except BaseException as e:    # noqa: BLE001 — e.g. a concurrent
-                for _, fut in ops:        # drop_collection; never strand a
+                for _, fut in hot:        # drop_collection; never strand a
                     if not fut.done():    # future in a dead group
                         fut._set_error(e)
         return n
@@ -384,6 +468,9 @@ class MemoryService:
 
         def fn():
             try:
+                # promote-then-query inside ONE task (see _execute): a lane
+                # excluded from fusion for being non-HOT re-admits here
+                self._residency.ensure_hot(coll)
                 out = coll.query(op.payload, k=k, nprobe=nprobe, path=path)
             except BaseException as e:    # noqa: BLE001
                 fut._set_error(e)
@@ -432,11 +519,27 @@ class MemoryService:
 
         def fn():
             try:
-                results = fuse.execute_group(
-                    [lanes[nm]["coll"] for nm in order],
-                    [np.concatenate(lanes[nm]["qs"]) for nm in order],
-                    cfg, k, nprobe, path, mesh=mesh,
-                    cache=self._stack_cache)
+                colls = [lanes[nm]["coll"] for nm in order]
+                qs = [np.concatenate(lanes[nm]["qs"]) for nm in order]
+                results = None
+                # a lane can demote between flush and dispatch (background
+                # idle demotion / eviction races the scheduler queue):
+                # re-promote and retry the stacked dispatch a few times,
+                # then fall back to per-lane queries, which promote
+                # themselves under the writer lock and cannot lose the race
+                for _ in range(3):
+                    for c in colls:
+                        self._residency.ensure_hot(c)
+                    try:
+                        results = fuse.execute_group(
+                            colls, qs, cfg, k, nprobe, path, mesh=mesh,
+                            cache=self._stack_cache)
+                        break
+                    except fuse.NotResident:
+                        continue
+                if results is None:
+                    results = [c.query(q, k=k, nprobe=nprobe, path=path)
+                               for c, q in zip(colls, qs)]
                 fuse.demux([lanes[nm]["entries"] for nm in order], results)
             except BaseException as e:    # noqa: BLE001
                 for fut in futs:
@@ -496,6 +599,20 @@ class MemoryService:
         return self.submit(MemoryOp("rebuild", collection,
                                     shard=shard)).result()
 
+    def promote(self, collection: str) -> str:
+        """Bring a collection onto the device tier (blocks); returns its
+        residency tier afterwards ("hot").  Queries promote on demand —
+        this is the explicit warm-up for latency-sensitive tenants."""
+        return self.submit(MemoryOp("promote", collection)).result()
+
+    def demote(self, collection: str, tier: str = "warm") -> str:
+        """Evict a collection off the device tier (blocks): "warm" parks
+        its state in host RAM, "cold" leaves only its disk checkpoint
+        (requires the service's `residency_dir`).  Returns the resulting
+        tier.  The next query transparently promotes it back."""
+        return self.submit(MemoryOp("demote", collection,
+                                    tier=tier)).result()["tier"]
+
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         with self._lock:
@@ -505,7 +622,8 @@ class MemoryService:
         return {"collections": {n: c.stats() for n, c in colls.items()},
                 "scheduler": sched.stats() if sched is not None else {},
                 "maintenance": maint.stats() if maint is not None else {},
-                "stack_cache": self._stack_cache.stats()}
+                "stack_cache": self._stack_cache.stats(),
+                "residency": self._residency.stats()}
 
     def shutdown(self) -> None:
         with self._lock:
@@ -546,16 +664,29 @@ class MemoryService:
     def load(cls, directory: str, *,
              scheduler: Optional[WindowedScheduler] = None,
              batch_window: int = 8, step: Optional[int] = None,
-             maintenance: bool = True, mesh=None,
-             reshard: bool = False) -> "MemoryService":
+             maintenance: bool = True, mesh=None, reshard: bool = False,
+             device_budget_bytes: Optional[int] = None,
+             residency_dir: Optional[str] = None,
+             idle_demote_s: Optional[float] = None,
+             cold_after_s: Optional[float] = None) -> "MemoryService":
         """Restore a saved service.  `mesh` is required when the registry
         holds sharded collections (they restore onto it; pass
         `reshard=True` to accept a mesh shape different from the one the
-        snapshot was saved on — rows are re-packed host-side)."""
+        snapshot was saved on — rows are re-packed host-side).
+
+        Residency round-trips: a collection saved WARM restores host-side,
+        one saved COLD restores as a pointer to its own checkpoint namespace
+        without reading the arrays — the first query promotes either back.
+        The residency knobs (`device_budget_bytes` etc.) configure the
+        restored service's manager, which every loaded collection registers
+        with; HOT restores count against the budget immediately."""
         with open(os.path.join(directory, SERVICE_FILE)) as f:
             registry = json.load(f)
         svc = cls(scheduler=scheduler, batch_window=batch_window,
-                  maintenance=maintenance)
+                  maintenance=maintenance,
+                  device_budget_bytes=device_budget_bytes,
+                  residency_dir=residency_dir, idle_demote_s=idle_demote_s,
+                  cold_after_s=cold_after_s)
         for name, entry in registry["collections"].items():
             cfg = EngineConfig(**entry["cfg"])
             kw = {}
@@ -571,6 +702,7 @@ class MemoryService:
                 step=step, reshard=reshard, **kw)
             with svc._lock:
                 svc._collections[name] = coll
+            svc._residency.register(coll)
         if registry["collections"]:
             svc._ensure_maintenance()
         return svc

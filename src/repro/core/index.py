@@ -22,6 +22,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import EngineConfig
 from repro.kernels import ops
@@ -99,6 +100,56 @@ def empty_state(cfg: EngineConfig, spill_capacity: int = 4096) -> IVFState:
             q_spill_norms=jnp.zeros((spill_capacity,), jnp.float32),
         )
     return state
+
+
+def empty_host_state(cfg: EngineConfig, spill_capacity: int = 4096) -> IVFState:
+    """Numpy mirror of `empty_state` — no device allocation.
+
+    Used as the restore template for the non-HOT residency tiers (a WARM or
+    COLD collection must be loadable without touching the accelerator) and
+    for analytic size accounting (`state_nbytes`)."""
+    c, l, d = cfg.n_clusters, cfg.list_capacity, cfg.dim
+    state = IVFState(
+        centroids=np.zeros((c, d), np.float32),
+        lists=np.zeros((c, l, d), np.float32),
+        list_ids=np.full((c, l), -1, np.int32),
+        list_sizes=np.zeros((c,), np.int32),
+        spill=np.zeros((spill_capacity, d), np.float32),
+        spill_ids=np.full((spill_capacity,), -1, np.int32),
+        spill_size=np.zeros((), np.int32),
+        num_deleted=np.zeros((), np.int32),
+    )
+    if cfg.quantized:
+        state = state._replace(
+            q_lists=np.zeros((c, l, d), np.int8),
+            q_scales=np.ones((c,), np.float32),
+            q_zeros=np.zeros((c,), np.float32),
+            q_norms=np.zeros((c, l), np.float32),
+            q_spill=np.zeros((spill_capacity, d), np.int8),
+            q_spill_scales=np.ones((spill_capacity,), np.float32),
+            q_spill_zeros=np.zeros((spill_capacity,), np.float32),
+            q_spill_norms=np.zeros((spill_capacity,), np.float32),
+        )
+    return state
+
+
+def state_nbytes(cfg: EngineConfig, spill_capacity: int = 4096,
+                 n_shards: int = 1) -> int:
+    """Exact resident byte size of a collection state with these shapes.
+
+    Equals `footprint(state)["index_bytes"]` without materializing any
+    array — the shapes are static per (cfg, spill_capacity, shard count),
+    so the residency budget can charge a collection before it exists on
+    device.  A mesh-sharded global state replicates the centroids once and
+    stacks every other leaf `n_shards` times (`distributed.empty_dist_state`
+    layout: per-shard lists/spill slabs, per-shard scalar counters).
+    """
+    t = empty_host_state(cfg, spill_capacity)
+    total = sum(leaf.nbytes for leaf in jax.tree.leaves(t))
+    if n_shards == 1:
+        return int(total)
+    cent = t.centroids.nbytes
+    return int(cent + n_shards * (total - cent))
 
 
 def live_count(state: IVFState) -> jax.Array:
@@ -645,14 +696,21 @@ def query_probed(state: IVFState, q: jax.Array, cfg: EngineConfig,
 def footprint(state: IVFState) -> dict:
     """Resident-size accounting for the scan store.
 
-    `bytes_per_row` is what the coarse scan streams per stored vector (1
-    byte/component under int8 policy, 4 under f32 — the paper's DRAM-traffic
-    argument in numbers); `index_bytes` sums every materialized leaf,
-    including the f32 rescore tier a quantized index still keeps.
+    `bytes_per_row` is the full resident footprint per stored vector slot:
+    under the int8 policy a row costs its retained exact f32 copy (the
+    rescore tier — quantization is a derived scan stream, not a replacement
+    store) PLUS its 1-byte/component code, so budgets charged from this
+    number are truthful.  `scan_bytes_per_row` is what the coarse scan
+    *streams* per vector — 1 byte/component under int8, 4 under f32 — the
+    paper's DRAM-traffic argument in numbers.  `index_bytes` sums every
+    materialized leaf (both vector tiers, the spill buffer, ids, counters,
+    and the per-list quantizer scalars), so it is the number the residency
+    budget audits against.
     """
-    row_itemsize = 1 if state.quantized else 4
+    row_itemsize = 5 if state.quantized else 4
     return {
         "bytes_per_row": state.dim * row_itemsize,
+        "scan_bytes_per_row": state.dim * (1 if state.quantized else 4),
         "index_bytes": sum(
             leaf.size * leaf.dtype.itemsize
             for leaf in jax.tree.leaves(state)),

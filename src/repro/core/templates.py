@@ -98,7 +98,8 @@ def route(kind: str, batch: int, cfg: EngineConfig,
           fused_lanes: int = 1) -> ExecPlan:
     """Map (workload kind, batch) -> execution plan.
 
-    kind: "build" | "query" | "insert" | "delete" | "rebuild"
+    kind: "build" | "query" | "insert" | "delete" | "rebuild" |
+          "promote" | "demote"
 
     fused_lanes: number of distinct collection lanes a cross-collection
     batched dispatch stacks (1 = a plain single-collection op).  A fused
@@ -138,4 +139,13 @@ def route(kind: str, batch: int, cfg: EngineConfig,
     if kind == "rebuild":
         # paper index template: large, latency-insensitive, all units
         return ExecPlan("index", "rebuild", "background", 2, 1, sd)
+    if kind == "promote":
+        # residency template: device (re)admission ahead of queries — bulk
+        # host->device transfer, throughput-shaped but query-blocking, so
+        # it must never sit behind background index work
+        return ExecPlan("residency", "promote", "throughput", 0,
+                        cfg.window, sd)
+    if kind == "demote":
+        # eviction/idle demotion: device->host/disk drain, pure background
+        return ExecPlan("residency", "demote", "background", 2, 1, sd)
     raise ValueError(f"unknown workload kind {kind!r}")

@@ -193,8 +193,13 @@ def test_mixed_dtype_window_splits():
             np.testing.assert_array_equal(ids_, sync[n][0])
             np.testing.assert_array_equal(scores_, sync[n][1])
         st = svc.stats()["collections"]
-        assert st["q0"]["bytes_per_row"] == DIM          # 1 byte/component
+        # int8 storage keeps BOTH the quantized codes (1 B/component, the
+        # scan operand stream) and the retained f32 rows (4 B/component,
+        # the exact-rescore source) resident
+        assert st["q0"]["bytes_per_row"] == 5 * DIM
+        assert st["q0"]["scan_bytes_per_row"] == DIM     # 1 byte/component
         assert st["f0"]["bytes_per_row"] == 4 * DIM
+        assert st["f0"]["scan_bytes_per_row"] == 4 * DIM
         assert st["q0"]["store_dtype"] == "int8"
         assert st["q0"]["index_bytes"] > 0
     finally:

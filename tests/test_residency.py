@@ -1,0 +1,404 @@
+"""Tiered storage: residency manager, demote/promote, eviction, rebalance.
+
+The device tier is byte-budgeted (`MemoryService(device_budget_bytes=...)`)
+and every collection lives in exactly one residency tier — HOT (device),
+WARM (host RAM), COLD (disk checkpoint).  These tests pin the subsystem's
+invariants:
+
+* demote→promote round-trips are bitwise: a collection parked in host RAM
+  or on disk answers exactly what the always-HOT collection answers;
+* queries and writes against a non-HOT collection promote transparently
+  (the service chains promote→query inside one scheduler task and surfaces
+  cold-hit latency separately);
+* admission under a byte budget evicts least-recently-used tenants (and
+  drains the StackCache first), and the device/host/disk byte breakdown in
+  `svc.stats()["residency"]` always sums to the audited footprint;
+* fused batched windows never stack a non-HOT lane — demoted lanes fall
+  out of the fused group and dispatch as self-promoting singletons;
+* residency survives save/load, including COLD-as-a-pointer (no arrays
+  read until the first query);
+* shard-local spill rebalance: a full shard's rebuild hands its overflow
+  rows to an underfull sibling with zero lost ids.
+"""
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from conftest import live_ids
+
+from repro.api import Collection, MemoryOp, MemoryService
+from repro.configs.base import EngineConfig
+from repro.core import index as ivf
+
+CFG = EngineConfig(dim=128, n_clusters=128, list_capacity=16, nprobe=8,
+                   k=4, use_kernel=False, kmeans_iters=2)
+SCFG = EngineConfig(dim=128, n_clusters=128, list_capacity=16, nprobe=8,
+                    k=4, use_kernel=False, kmeans_iters=2, shard_db=True)
+N0 = 256
+SPILL = 64
+
+
+def _corpus(n, seed=0, dim=128):
+    x = np.random.default_rng(seed).standard_normal((n, dim),
+                                                    dtype=np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _nb(cfg=CFG, n_shards=1):
+    return ivf.state_nbytes(cfg, spill_capacity=SPILL, n_shards=n_shards)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (satellite: footprint under int8 counts codes + f32 rows)
+# ---------------------------------------------------------------------------
+
+def test_state_nbytes_matches_footprint():
+    import dataclasses
+    for cfg in (CFG, dataclasses.replace(CFG, store_dtype="int8",
+                                         rescore_k=32)):
+        state = ivf.empty_state(cfg, spill_capacity=SPILL)
+        fp = ivf.footprint(state)
+        assert fp["index_bytes"] == ivf.state_nbytes(cfg,
+                                                     spill_capacity=SPILL)
+        if cfg.store_dtype == "int8":
+            # int8 keeps BOTH the 1 B/component codes (scan stream) and
+            # the retained 4 B/component f32 rows (exact rescore)
+            assert fp["bytes_per_row"] == 5 * cfg.dim
+            assert fp["scan_bytes_per_row"] == cfg.dim
+        else:
+            assert fp["bytes_per_row"] == 4 * cfg.dim
+            assert fp["scan_bytes_per_row"] == 4 * cfg.dim
+    # sharded: centroids replicate once, everything else scales per shard
+    one = ivf.state_nbytes(CFG, spill_capacity=SPILL, n_shards=1)
+    two = ivf.state_nbytes(CFG, spill_capacity=SPILL, n_shards=2)
+    cent = ivf.empty_host_state(CFG, spill_capacity=SPILL).centroids.nbytes
+    assert two == cent + 2 * (one - cent)
+
+
+# ---------------------------------------------------------------------------
+# Collection-level demote/promote
+# ---------------------------------------------------------------------------
+
+def test_demote_promote_roundtrip_bitwise(tmp_path):
+    coll = Collection("c", CFG, spill_capacity=SPILL)
+    coll.build(_corpus(N0))
+    q = _corpus(4, seed=7)
+    want = coll.query(q, k=4)
+    want_live = live_ids(coll.snapshot())
+
+    # HOT -> WARM: device state released, snapshot reads None
+    out = coll.demote("warm")
+    assert out["demoted"] and coll.residency == "warm"
+    assert coll.snapshot() is None
+    assert coll.stats()["residency"] == "warm"
+    # re-demoting is a no-op, not an error
+    assert coll.demote("warm")["demoted"] is False
+
+    # query auto-promotes and is bitwise identical
+    got = coll.query(q, k=4)
+    assert coll.residency == "hot"
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    assert live_ids(coll.snapshot()) == want_live
+
+    # WARM -> COLD: only the checkpoint remains; cold demote needs a dir
+    coll.demote("warm")
+    with pytest.raises(ValueError, match="cold"):
+        coll.demote("cold")
+    coll.demote("cold", directory=str(tmp_path / "c"))
+    assert coll.residency == "cold"
+    assert coll._host_state is None
+    got = coll.query(q, k=4)                   # disk -> device in one hop
+    assert coll.residency == "hot"
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+    # writers promote too: insert/delete on a demoted collection
+    coll.demote("warm")
+    coll.insert(_corpus(8, seed=20), ids=np.arange(90_000, 90_008))
+    assert coll.residency == "hot"
+    assert live_ids(coll.snapshot()) == want_live | set(range(90_000, 90_008))
+    coll.demote("warm")
+    assert coll.delete(np.arange(90_000, 90_008)) == 8
+    assert coll.residency == "hot"
+    assert live_ids(coll.snapshot()) == want_live
+
+
+def test_concurrent_queries_during_demotion():
+    """Queries racing repeated demotions never error and never see a torn
+    state — every answer equals the always-HOT reference."""
+    coll = Collection("c", CFG, spill_capacity=SPILL)
+    coll.build(_corpus(N0, seed=3))
+    q = _corpus(4, seed=8)
+    want = coll.query(q, k=4)
+    errors, stop = [], threading.Event()
+
+    def demoter():
+        try:
+            while not stop.is_set():
+                coll.demote("warm")
+                time.sleep(0.005)
+        except BaseException as e:   # noqa: BLE001
+            errors.append(e)
+
+    def querier():
+        try:
+            for _ in range(25):
+                ids, scores = coll.query(q, k=4)
+                np.testing.assert_array_equal(ids, want[0])
+                np.testing.assert_array_equal(scores, want[1])
+        except BaseException as e:   # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=demoter)] + \
+              [threading.Thread(target=querier) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads[1:]:
+        t.join()
+    stop.set()
+    threads[0].join()
+    assert not errors, errors
+    assert coll.query(q, k=4)[0].shape == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# Service-level budget, eviction, async promotion
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_at_budget(tmp_path):
+    """3 collections under a ~2.2-collection budget: every build/query
+    succeeds, the least-recently-used tenant gets evicted, and the byte
+    breakdown always sums to the audited footprint."""
+    budget = int(_nb() * 2.2)
+    svc = MemoryService(maintenance=False, device_budget_bytes=budget,
+                        residency_dir=str(tmp_path))
+    try:
+        X = _corpus(N0)
+        q = _corpus(4, seed=7)
+        for n in ("a", "b", "c"):
+            svc.create_collection(n, CFG, spill_capacity=SPILL)
+            svc.build(n, X)
+        st = svc.stats()["residency"]
+        assert st["evictions"] >= 1                 # budget < 3 tenants
+        assert sorted(st["tiers"].values()).count("hot") <= 2
+        ref = svc.query("a", q, k=4)                # may be a cold hit
+        # LRU: touch b and c, then admitting a must evict neither of them
+        svc.query("b", q, k=4)
+        svc.query("c", q, k=4)
+        svc.demote("a")                             # off-device
+        got = svc.query("a", q, k=4)                # promotes, evicts LRU=b
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_array_equal(got[1], ref[1])
+        st = svc.stats()["residency"]
+        assert st["tiers"]["a"] == "hot"
+        assert st["cold_hits"] >= 1
+        assert st["promote_s_mean"] is not None     # cold-hit latency seam
+        # capacity invariant: device+host+disk == sum of audited footprints
+        # (+ the StackCache's derived device copies, counted in device)
+        audited = 3 * _nb() + st["stack_cache_bytes"]
+        assert (st["device_bytes"] + st["host_bytes"]
+                + st["disk_bytes"]) == audited
+        assert st["device_bytes"] - st["stack_cache_bytes"] <= budget
+    finally:
+        svc.shutdown()
+
+
+def test_async_promote_query_on_cold_collection(tmp_path):
+    """submit() against a COLD tenant returns immediately; the scheduler
+    task chains promote->query and the answer is bitwise-equal to the
+    always-HOT answer."""
+    svc = MemoryService(maintenance=False, residency_dir=str(tmp_path))
+    try:
+        svc.create_collection("c", CFG, spill_capacity=SPILL)
+        svc.build("c", _corpus(N0))
+        q = _corpus(4, seed=7)
+        want = svc.query("c", q, k=4)
+        assert svc.demote("c", tier="cold") == "cold"
+        assert svc.collection("c").residency == "cold"
+        fut = svc.submit(MemoryOp("query", "c", q, k=4))
+        ids, scores = fut.result(timeout=60)
+        np.testing.assert_array_equal(ids, want[0])
+        np.testing.assert_array_equal(scores, want[1])
+        assert svc.collection("c").residency == "hot"
+        st = svc.stats()["residency"]
+        assert st["cold_hits"] >= 1 and st["promotions"] >= 1
+        # explicit sync wrappers round-trip the tier
+        assert svc.demote("c") == "warm"
+        assert svc.promote("c") == "hot"
+    finally:
+        svc.shutdown()
+
+
+def test_fused_window_never_stacks_non_hot_lane():
+    """Park same-signature queries on 3 tenants, demote one: flush must
+    dispatch the 2 HOT lanes as ONE fused group plus the demoted lane as a
+    self-promoting singleton — 2 dispatches, all answers exact."""
+    svc = MemoryService(maintenance=False, batch_window=64)
+    try:
+        X, q = _corpus(N0), _corpus(3, seed=7)
+        for n in ("a", "b", "c"):
+            svc.create_collection(n, CFG, spill_capacity=SPILL)
+            svc.build(n, X)
+        sync = {n: svc.query(n, q, k=4) for n in ("a", "b", "c")}
+        svc.demote("b")
+        assert svc.collection("b").residency == "warm"
+        futs = {n: svc.submit(MemoryOp("query", n, q, k=4, batch=True))
+                for n in ("a", "b", "c")}
+        assert svc.flush() == 2      # {a,c} fused; b dispatches alone
+        for n, fut in futs.items():
+            ids, scores = fut.result(timeout=60)
+            np.testing.assert_array_equal(ids, sync[n][0])
+            np.testing.assert_array_equal(scores, sync[n][1])
+        assert svc.collection("b").residency == "hot"   # singleton promoted
+    finally:
+        svc.shutdown()
+
+
+def test_background_idle_demotion(tmp_path):
+    """The MaintenanceController's residency sweep demotes idle tenants on
+    its own: HOT past idle_demote_s -> WARM, WARM past cold_after_s ->
+    COLD, without any caller intervention."""
+    svc = MemoryService(maintenance_poll_interval_s=0.02,
+                        residency_dir=str(tmp_path),
+                        idle_demote_s=0.2, cold_after_s=0.5)
+    try:
+        svc.create_collection("c", CFG, spill_capacity=SPILL)
+        svc.build("c", _corpus(N0))
+        q = _corpus(2, seed=7)
+        want = svc.query("c", q, k=4)
+        deadline = time.time() + 60
+        while (svc.collection("c").residency != "cold"
+               and time.time() < deadline):
+            time.sleep(0.05)
+        assert svc.collection("c").residency == "cold"
+        assert svc.stats()["maintenance"]["demotions_triggered"] >= 2
+        got = svc.query("c", q, k=4)     # wakes it straight from disk
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_array_equal(got[1], want[1])
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Persistence round-trips
+# ---------------------------------------------------------------------------
+
+def test_residency_survives_save_load(tmp_path):
+    svc = MemoryService(maintenance=False, residency_dir=str(tmp_path / "r"))
+    q = _corpus(4, seed=7)
+    try:
+        want = {}
+        for n in ("hot0", "warm0", "cold0"):
+            svc.create_collection(n, CFG, spill_capacity=SPILL)
+            svc.build(n, _corpus(N0))
+            want[n] = svc.query(n, q, k=4)
+        svc.demote("warm0", tier="warm")
+        svc.demote("cold0", tier="cold")
+        svc.save(str(tmp_path / "snap"))
+        # demoting to cold then saving must keep the service queryable
+        assert svc.collection("cold0").residency == "cold"
+    finally:
+        svc.shutdown()
+    back = MemoryService.load(str(tmp_path / "snap"), maintenance=False)
+    try:
+        tiers = {n: back.collection(n).residency
+                 for n in ("hot0", "warm0", "cold0")}
+        assert tiers == {"hot0": "hot", "warm0": "warm", "cold0": "cold"}
+        # COLD restored as a pointer: no state arrays held anywhere
+        assert back.collection("cold0").snapshot() is None
+        assert back.collection("cold0")._host_state is None
+        for n in ("hot0", "warm0", "cold0"):
+            ids, scores = back.query(n, q, k=4)
+            np.testing.assert_array_equal(ids, want[n][0])
+            np.testing.assert_array_equal(scores, want[n][1])
+    finally:
+        back.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Sharded tiers + spill rebalance (2 fake CPU devices via conftest)
+# ---------------------------------------------------------------------------
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 devices (conftest forces 2 fake CPU devices unless "
+           "XLA_FLAGS was pre-set)")
+
+
+@needs_mesh
+def test_sharded_demote_promote_roundtrip(tmp_path):
+    mesh = jax.make_mesh((2,), ("shard",))
+    coll = Collection("c", SCFG, mesh=mesh, spill_capacity=SPILL)
+    coll.build(_corpus(512))
+    q = _corpus(4, seed=7)
+    want = coll.query(q, k=4)
+    want_live = live_ids(coll.snapshot())
+    for tier, kw in (("warm", {}),
+                     ("cold", {"directory": str(tmp_path / "c")})):
+        coll.demote("warm")
+        if tier == "cold":
+            coll.demote("cold", **kw)
+        assert coll.residency == tier
+        got = coll.query(q, k=4)
+        assert coll.residency == "hot"
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_array_equal(got[1], want[1])
+        assert live_ids(coll.snapshot()) == want_live
+    # warm sharded state save/loads with its tier
+    coll.demote("warm")
+    coll.save_into(str(tmp_path / "snap"))
+    back = Collection.load_from(str(tmp_path / "snap"), "c", SCFG, mesh=mesh)
+    assert back.residency == "warm"
+    got = back.query(q, k=4)
+    np.testing.assert_array_equal(got[0], want[0])
+
+
+@needs_mesh
+def test_sharded_spill_rebalance():
+    """A hot-spotted shard's rebuild hands its residual spill rows to the
+    underfull sibling (zero lost ids); the sibling's own rebuild then
+    absorbs them into list slots."""
+    from repro.core import templates
+    mesh = jax.make_mesh((2,), ("shard",))
+    th = templates.TemplateThresholds(maintenance_spill_frac=0.01,
+                                      maintenance_shard_min_pending=16)
+    coll = Collection("c", SCFG, mesh=mesh, spill_capacity=1024,
+                      thresholds=th)
+    coll.build(_corpus(512))
+    v = _corpus(1, seed=99)[0]
+    nid = 10_000
+    # contiguous-block insert split: the FIRST half of each batch lands on
+    # shard 0 — cluster it tightly around v so one centroid's 16-slot list
+    # overflows there, while shard 1's half stays diverse
+    for i in range(10):
+        hot = v[None, :] + 1e-3 * np.random.default_rng(i).standard_normal(
+            (8, 128)).astype(np.float32)
+        hot /= np.linalg.norm(hot, axis=1, keepdims=True)
+        batch = np.concatenate([hot, _corpus(8, seed=500 + i)])
+        coll.insert(batch.astype(np.float32),
+                    ids=np.arange(nid, nid + 16))
+        nid += 16
+    want = live_ids(coll.snapshot())
+    press = coll.maintenance_pressure()["shards"]
+    assert press[0]["spilled"] > 0 and press[1]["spilled"] == 0
+    assert 0 in coll.maintenance_due_shards()   # controller would fire this
+    out = coll.rebuild(shard=0)
+    assert not out["aborted"]
+    assert out["rebalanced"] > 0 and out["rebalance_to"] == 1
+    assert live_ids(coll.snapshot()) == want    # zero lost rows
+    post = coll.maintenance_pressure()["shards"]
+    assert post[0]["spilled"] == 0
+    assert post[1]["spilled"] == out["rebalanced"]
+    # destination shard's rebuild drains the adopted rows into lists
+    out2 = coll.rebuild(shard=1)
+    assert not out2["aborted"]
+    assert live_ids(coll.snapshot()) == want
+    ids, _ = coll.query(v[None, :], k=4)
+    assert set(ids[0].tolist()) <= want
