@@ -29,7 +29,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.configs.base import V5E
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 B, N, D = 128, 8192, 1024
 
@@ -99,12 +99,12 @@ def run():
                 fused_conversion=kw["fused_conversion"])
             np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                        rtol=3e-2, atol=3e-2)
-            wall = common.timeit(lambda: jax.block_until_ready(
+            wall = common.timeit(lambda kw=kw: jax.block_until_ready(
                 ops.scan_scores(q, db, ids, None, metric="ip",
                                 use_kernel=False,
                                 fused_conversion=kw["fused_conversion"])))
         else:
-            wall = common.timeit(lambda: jax.block_until_ready(
+            wall = common.timeit(lambda kw=kw: jax.block_until_ready(
                 ops.scan_scores(q, db, ids, None, metric="ip", **kw)))
         t_proj = _v5e_seconds(letter)
         gf = 2.0 * B * N * D / t_proj / 1e9

@@ -10,8 +10,6 @@ GEMM time — the sawtooth reproduces in all three.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
 from repro.configs.base import EngineConfig, V5E
 from repro.core.engine import AgenticMemoryEngine

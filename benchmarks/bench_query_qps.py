@@ -38,7 +38,8 @@ def run(n: int = N, dim: int = DIM):
         ids, _ = svc.query("ame", qp, k=K, nprobe=nprobe, path="probed")
         rec = metrics.recall_at_k(ids, true[:16])
         sec = common.timeit(
-            lambda: svc.query("ame", qp, k=K, nprobe=nprobe, path="probed"),
+            lambda nprobe=nprobe: svc.query("ame", qp, k=K, nprobe=nprobe,
+                                            path="probed"),
             warmup=0, iters=2) * (NQ / 16)
         common.emit("query_qps", f"ame_nprobe{nprobe}_recall",
                     round(rec, 4), "recall@10")
@@ -63,8 +64,8 @@ def run(n: int = N, dim: int = DIM):
         ids, _ = svc.query("naive", qp, k=K, nprobe=nprobe, path="probed")
         rec = metrics.recall_at_k(ids, true[:16])
         sec = common.timeit(
-            lambda: svc.query("naive", qp, k=K, nprobe=nprobe,
-                              path="probed"),
+            lambda nprobe=nprobe: svc.query("naive", qp, k=K, nprobe=nprobe,
+                                            path="probed"),
             warmup=0, iters=2) * (NQ / 16)
         common.emit("query_qps", f"naive_ivf_nprobe{nprobe}_recall",
                     round(rec, 4), "recall@10")
@@ -80,7 +81,8 @@ def run(n: int = N, dim: int = DIM):
     for ef in (16, 64, 128):
         ids = h.search_batch(q, K, ef=ef)
         rec = metrics.recall_at_k(ids, true_h)
-        sec = common.timeit(lambda: h.search_batch(q, K, ef=ef), iters=1)
+        sec = common.timeit(lambda ef=ef: h.search_batch(q, K, ef=ef),
+                            iters=1)
         common.emit("query_qps", f"hnsw_ef{ef}_recall",
                     round(rec, 4), "recall@10")
         common.emit("query_qps", f"hnsw_ef{ef}_qps",

@@ -11,7 +11,7 @@ number the §Perf program optimizes.
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable, List, Optional
+from typing import Callable, List
 
 import numpy as np
 

@@ -40,7 +40,6 @@ writers.
 from __future__ import annotations
 
 import functools
-import threading
 import weakref
 from collections import OrderedDict
 from typing import List, Optional, Sequence, Tuple
@@ -51,6 +50,7 @@ import numpy as np
 
 from repro.configs.base import EngineConfig
 from repro.core import index as ivf
+from repro.core import locking
 
 
 class NotResident(RuntimeError):
@@ -120,7 +120,7 @@ class StackCache:
 
     def __init__(self, maxsize: int = 4):
         self.maxsize = maxsize
-        self._lock = threading.Lock()
+        self._lock = locking.make_lock("_lock")
         # key -> (stacked_state, nbytes); nbytes feeds the residency
         # manager's device-budget accounting (the stacks are device copies)
         self._entries: OrderedDict = OrderedDict()

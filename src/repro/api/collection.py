@@ -47,7 +47,6 @@ import contextlib
 import dataclasses
 import json
 import os
-import threading
 import time
 from typing import List, Optional, Tuple
 
@@ -57,6 +56,7 @@ import numpy as np
 
 from repro.configs.base import EngineConfig
 from repro.core import index as ivf
+from repro.core import locking
 from repro.core import templates
 
 META_FILE = "collection.json"
@@ -89,9 +89,9 @@ class Collection:
         self.thresholds = thresholds or templates.TemplateThresholds.from_profile(cfg)
         self._built = False
         # _lock: snapshot swap + counters + id allocator (tiny sections only)
-        self._lock = threading.RLock()
+        self._lock = locking.make_rlock("_lock")
         # _writer_lock: serializes mutators; the query path never takes it
-        self._writer_lock = threading.RLock()
+        self._writer_lock = locking.make_rlock("_writer_lock")
         self._version = 0          # bumped on every state swap
         self._epoch = 0            # bumped on bulk build (obsoletes snapshots)
         self._next_id = 0
@@ -114,7 +114,8 @@ class Collection:
         #                    instead of re-triggering a futile rebuild
         n_shards = mesh.size if (cfg.shard_db and mesh is not None) else 1
         self._n_shards = n_shards
-        self._rebuild_locks = [threading.Lock() for _ in range(n_shards)]
+        self._rebuild_locks = [locking.make_lock("_rebuild_locks")
+                               for _ in range(n_shards)]
         self._delta_logs: List[Optional[List[ivf.DeltaOp]]] = [None] * n_shards
         self._delta_overflow = [False] * n_shards
         self._shard_versions = [0] * n_shards
@@ -1213,9 +1214,9 @@ class Collection:
             if residency == "cold":
                 # COLD = checkpointed + not loaded: adopt the namespace as
                 # the cold checkpoint, touch no array data at all
-                coll._cold_dir = directory
-                coll._cold_step = step
                 with coll._lock:
+                    coll._cold_dir = directory
+                    coll._cold_step = step
                     coll._residency_tier = "cold"
                 floors = meta.get("spill_floors", [0] * n_saved)
             else:
@@ -1241,9 +1242,9 @@ class Collection:
                     coll.state = dce.assemble_host(shards)
         else:
             if residency == "cold":
-                coll._cold_dir = directory
-                coll._cold_step = step
                 with coll._lock:
+                    coll._cold_dir = directory
+                    coll._cold_step = step
                     coll._residency_tier = "cold"
             else:
                 restored = Checkpointer(directory).restore(template,
@@ -1261,9 +1262,10 @@ class Collection:
                 floors = [int(meta.get("spill_floor", 0))]
         # keep the never-built guard across a save/load round-trip (older
         # snapshots without the flag were only saved after a build)
-        coll._built = bool(meta.get("built", True))
-        coll._next_id = int(meta.get("next_id", 0))
-        coll.counters.update(meta.get("counters", {}))
+        with coll._lock:
+            coll._built = bool(meta.get("built", True))
+            coll._next_id = int(meta.get("next_id", 0))
+            coll.counters.update(meta.get("counters", {}))
         # re-seed maintenance pressure so a reload doesn't silently forget
         # accumulated tombstones/spill: newer snapshots persist the host
         # counters (a demoted collection has no device scalars to read);
@@ -1277,15 +1279,17 @@ class Collection:
             press = press[:coll._n_shards]
             press += [{"tombstones": 0, "spilled": 0}
                       for _ in range(coll._n_shards - len(press))]
-            coll._shard_pressure = press
         else:
             st = coll.state
             deleted = np.atleast_1d(np.asarray(
                 jax.device_get(st.num_deleted)))
             spill = np.atleast_1d(np.asarray(jax.device_get(st.spill_size)))
-            coll._shard_pressure = [{"tombstones": int(deleted[s]),
-                                     "spilled": int(spill[s])}
-                                    for s in range(coll._n_shards)]
-        coll._spill_floors = [int(f) for f in floors][:coll._n_shards]
-        coll._spill_floors += [0] * (coll._n_shards - len(coll._spill_floors))
+            press = [{"tombstones": int(deleted[s]),
+                      "spilled": int(spill[s])}
+                     for s in range(coll._n_shards)]
+        spill_floors = [int(f) for f in floors][:coll._n_shards]
+        spill_floors += [0] * (coll._n_shards - len(spill_floors))
+        with coll._lock:
+            coll._shard_pressure = press
+            coll._spill_floors = spill_floors
         return coll

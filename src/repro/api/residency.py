@@ -49,9 +49,10 @@ tenant.
 from __future__ import annotations
 
 import os
-import threading
 import time
 from typing import Dict, List, Optional, Tuple
+
+from repro.core import locking
 
 TIERS = ("hot", "warm", "cold")
 
@@ -93,8 +94,8 @@ class ResidencyManager:
         self.idle_demote_s = idle_demote_s
         self.cold_after_s = cold_after_s
         self._cache = cache
-        self._admit_lock = threading.Lock()
-        self._lock = threading.Lock()
+        self._admit_lock = locking.make_lock("_admit_lock")
+        self._lock = locking.make_lock("_lock")
         self._collections: Dict[str, object] = {}
         # bytes reserved by in-flight admissions (promote/build between the
         # make-room decision and the collection actually turning HOT)
@@ -318,6 +319,7 @@ class ResidencyManager:
         cache_bytes = (self._cache.device_bytes()
                        if self._cache is not None else 0)
         with self._lock:
+            colls = list(self._collections.values())
             promotions = self.promotions
             stats = {
                 "device_budget_bytes": self.device_budget_bytes,
@@ -326,8 +328,6 @@ class ResidencyManager:
                 "disk_bytes": tiers["cold"],
                 "stack_cache_bytes": cache_bytes,
                 "reserved_bytes": sum(self._reserved.values()),
-                "tiers": {c.name: c.residency for c in
-                          self._collections.values()},
                 "promotions": promotions,
                 "demotions": self.demotions,
                 "evictions": self.evictions,
@@ -341,4 +341,9 @@ class ResidencyManager:
                                   if promotions else None),
                 "demote_s_total": self._demote_s_total,
             }
+        # each collection's `residency` property takes that collection's
+        # leaf lock — never nest those under the manager's own leaf lock
+        # (two same-level locks in a fixed cross-object order is a cycle
+        # waiting for the opposite nesting to appear)
+        stats["tiers"] = {c.name: c.residency for c in colls}
         return stats

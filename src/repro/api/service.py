@@ -47,6 +47,7 @@ from repro.api.collection import Collection, atomic_write_json
 from repro.api.ops import MemoryOp, OpFuture
 from repro.api.residency import ResidencyManager
 from repro.configs.base import EngineConfig
+from repro.core import locking
 from repro.core import templates
 from repro.core.scheduler import Task, WindowedScheduler
 
@@ -76,7 +77,7 @@ class MaintenanceController:
         self.poll_interval_s = poll_interval_s
         self.failure_backoff_s = failure_backoff_s
         self._stop = threading.Event()
-        self._lock = threading.Lock()
+        self._lock = locking.make_lock("_lock")
         # keyed by (collection, slot): slot is the shard id for rebuilds
         # (None for unsharded tenants) or "demote:<tier>" for residency
         # demotions — each slot has at most one op in flight
@@ -224,7 +225,7 @@ class MemoryService:
         self._own_scheduler = scheduler is None
         self.batch_window = batch_window
         self._collections: Dict[str, Collection] = {}
-        self._lock = threading.RLock()
+        self._lock = locking.make_rlock("_lock")
         self._pending: List[Tuple[MemoryOp, OpFuture]] = []
         # reuses stacked fused-group states while lane versions are
         # unchanged (see repro.api.batch.StackCache)
@@ -631,9 +632,11 @@ class MemoryService:
         if maint is not None:
             maint.stop()
         self.flush()
-        if self._own_scheduler and self._scheduler is not None:
-            self._scheduler.shutdown()
-            self._scheduler = None
+        if self._own_scheduler:
+            with self._lock:
+                sched, self._scheduler = self._scheduler, None
+            if sched is not None:
+                sched.shutdown()
 
     def __enter__(self) -> "MemoryService":
         return self

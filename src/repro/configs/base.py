@@ -5,8 +5,8 @@ Everything is a frozen dataclass so configs hash and can key jit caches.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 def _round_up(x: int, m: int) -> int:

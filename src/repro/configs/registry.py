@@ -1,7 +1,7 @@
 """Architecture registry: `--arch <id>` lookup, shapes, reduced smoke configs."""
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 from repro.configs import archs
 from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
@@ -11,7 +11,9 @@ def get_arch(name: str) -> ModelConfig:
     try:
         return archs.ALL_ARCHS[name]
     except KeyError:
-        raise KeyError(f"unknown arch {name!r}; known: {sorted(archs.ALL_ARCHS)}")
+        raise KeyError(
+            f"unknown arch {name!r}; known: "
+            f"{sorted(archs.ALL_ARCHS)}") from None
 
 
 def get_shape(name: str) -> ShapeConfig:

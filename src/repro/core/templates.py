@@ -16,7 +16,6 @@ Fig. 4 analogue) and can be re-fit at runtime via ``fit_thresholds``.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Tuple
 

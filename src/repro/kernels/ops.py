@@ -8,7 +8,6 @@ materializes a converted copy (the "naive port" the paper argues against).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import registry
-from repro.configs.base import (
-    ModelConfig, ShapeConfig, TrainConfig, MeshConfig, V5E)
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh, describe
 from repro.models import api, lm, specs

@@ -34,7 +34,6 @@ returned is PER DEVICE — exactly the normalization the roofline terms need.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

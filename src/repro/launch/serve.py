@@ -61,7 +61,6 @@ def main(argv=None):
     corpus = np.random.default_rng(args.seed).standard_normal(
         (args.corpus, ecfg.dim), dtype=np.float32)
     corpus /= np.linalg.norm(corpus, axis=1, keepdims=True)
-    t0 = time.perf_counter()
     stats = svc.build("serve", corpus)
     print(f"memory built: {args.corpus} vectors in {stats['build_s']:.2f}s")
 

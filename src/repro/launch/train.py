@@ -9,9 +9,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-import numpy as np
-
 from repro.configs import registry
 from repro.configs.base import TrainConfig
 from repro.data.pipeline import TokenDataset, Prefetcher

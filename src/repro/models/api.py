@@ -7,7 +7,7 @@ include precomputed frame/patch embeddings.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

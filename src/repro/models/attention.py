@@ -13,8 +13,7 @@ softmax reductions over the model axis.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,7 @@
 """Shared model layers: norms, MLPs, embeddings, RoPE (incl. M-RoPE)."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +70,6 @@ def mlp_apply(p, x, act: str):
 
 
 def mlp_specs():
-    from repro.models.sharding import spec
     return {"wi": ("fsdp", "model"), "wu": ("fsdp", "model"),
             "wo": ("model", "fsdp")}
 

@@ -12,8 +12,7 @@ their out-proj rows start at 0 so they are inert at init) — DESIGN.md
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -262,7 +261,7 @@ def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None,
             ck, cv = caches.k, caches.v
             aux = jnp.zeros((), jnp.float32)
             for l in range(n):
-                p_l = jax.tree.map(lambda t: t[l], params["blocks"])
+                p_l = jax.tree.map(lambda t, l=l: t[l], params["blocks"])
                 x, ck, cv, a = _dense_block_decode(
                     p_l, x, cfg, ck, cv, l, window=windows[l],
                     positions=positions, mrope_pos=mrope_pos, pos=pos)
@@ -344,7 +343,6 @@ def _run_stack(params, x, cfg: ModelConfig, *, mode, caches=None, pos=None,
 def init_caches(cfg: ModelConfig, batch: int, s_max: int, dtype):
     """Stacked per-layer caches for decode (s_max = KV capacity)."""
     fam = cfg.family
-    hp = heads_padded(cfg)
     if fam in ("dense", "moe", "vlm"):
         def one(_):
             return KVCache.init(batch, s_max, cfg.num_kv_heads, cfg.head_dim,

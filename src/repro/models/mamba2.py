@@ -11,7 +11,7 @@ Decode is the O(1) recurrent update on state [B, H, P, N].
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

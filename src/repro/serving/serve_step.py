@@ -7,15 +7,11 @@ shared-buffer design).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.models.sharding import shard
 
 
 def greedy(logits: jax.Array, vocab_size: int) -> jax.Array:
@@ -44,7 +40,7 @@ def generate(params, cfg: ModelConfig, batch, steps: int, s_max: int):
     decode = make_decode(cfg)
     tok, caches, pos = prefill(params, batch)
     out = [tok]
-    for i in range(steps - 1):
+    for _ in range(steps - 1):
         pos = pos + 1
         tok, caches = decode(params, tok, caches, pos)
         out.append(tok)

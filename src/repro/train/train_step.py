@@ -5,8 +5,7 @@ body); grad accumulation is a lax.scan over microbatches so HLO stays small.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.distributed import collectives
 from repro.models import lm
-from repro.models.sharding import shard
 from repro.train import optimizer
 
 AUX_WEIGHT = 0.01

@@ -1,8 +1,7 @@
 """Production training loop: sharded step, async checkpoints, fault hooks."""
 from __future__ import annotations
 
-import time
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,30 @@ if "jax" not in sys.modules:
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=2")
 
+# repo root on the path so test_analyze.py can `import tools.analyze`
+# (test runs use PYTHONPATH=src, which does not cover the tools package)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
 import numpy as np
+import pytest
+
+from repro.core import locking as _locking
+
+if _locking.debug_enabled():
+    # AME_DEBUG_LOCKS=1: every hierarchy lock in the engine is an
+    # instrumented wrapper recording acquisition order (tsan-lite).  Fail
+    # each test that produced a hierarchy inversion or an acquisition-order
+    # cycle anywhere — including on its background maintenance threads.
+    @pytest.fixture(autouse=True)
+    def _lock_order_guard():
+        _locking.validator.reset()
+        yield
+        violations = _locking.validator.drain()
+        assert not violations, (
+            "lock-order violations recorded during this test:\n  "
+            + "\n  ".join(violations))
 
 
 def live_ids(state):

@@ -1,0 +1,472 @@
+"""Tier-1 tests for the invariant analyzer (tools/analyze) and its runtime
+companion (repro.core.locking).
+
+The static passes are exercised on seeded fixture snippets — one dirty and
+one clean snippet per error code — and then on the real repo, which must be
+finding-free against the committed (empty) baseline.  The runtime lock
+validator is driven with a private validator instance so the assertions
+don't race the session-global one.
+"""
+import textwrap
+
+import pytest
+
+from repro.core import locking
+from tools.analyze import donation, invariants, lockorder, snapshot
+from tools.analyze.common import SourceFile, apply_waivers
+
+
+def run_passes(code, passes=(lockorder, donation, snapshot)):
+    src = SourceFile("<fixture>", "fixture.py", textwrap.dedent(code))
+    findings = []
+    for p in passes:
+        findings.extend(p.run([src]))
+    return apply_waivers([src], findings)
+
+
+def codes(findings):
+    return [f.code for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# lock-order pass
+# ---------------------------------------------------------------------------
+
+def test_lo001_inversion_flagged():
+    found = run_passes("""
+        class C:
+            def bad(self):
+                with self._lock:
+                    with self._writer_lock:
+                        pass
+    """, passes=(lockorder,))
+    assert codes(found) == ["LO001"]
+    assert "_writer_lock" in found[0].message
+
+
+def test_lo001_descending_order_clean():
+    found = run_passes("""
+        class C:
+            def good(self):
+                with self._writer_lock:
+                    with self._lock:
+                        pass
+                with self._rebuild_locks[0]:
+                    with self._writer_lock:
+                        pass
+    """, passes=(lockorder,))
+    assert found == []
+
+
+def test_lo001_bare_acquire_and_cm_helper():
+    found = run_passes("""
+        class C:
+            def bad(self):
+                self._lock.acquire()
+                with self._hot_writer():
+                    pass
+                self._lock.release()
+    """, passes=(lockorder,))
+    assert "LO001" in codes(found)
+
+
+def test_lo001_release_forgets_lock():
+    found = run_passes("""
+        class C:
+            def good(self):
+                self._lock.acquire()
+                self._lock.release()
+                with self._writer_lock:
+                    pass
+    """, passes=(lockorder,))
+    assert found == []
+
+
+def test_lo002_leaf_lock_held_into_admission():
+    found = run_passes("""
+        class C:
+            def bad(self):
+                with self._lock:
+                    self._mgr.make_room_for(self, 123)
+    """, passes=(lockorder,))
+    assert codes(found) == ["LO002"]
+    assert "make_room_for" in found[0].message
+
+
+def test_lo002_admit_already_held_is_reentrant_clean():
+    found = run_passes("""
+        class C:
+            def good(self):
+                with self._admit_lock:
+                    self._mgr.make_room_for(self, 123)
+    """, passes=(lockorder,))
+    assert found == []
+
+
+def test_lo002_direct_acquisition_defines_ceiling():
+    # helper() directly takes _admit_lock; calling it under a leaf lock
+    # must be flagged even though helper isn't in CEILING_SEEDS
+    found = run_passes("""
+        def helper(mgr):
+            with mgr._admit_lock:
+                pass
+
+        class C:
+            def bad(self):
+                with self._lock:
+                    helper(self._mgr)
+    """, passes=(lockorder,))
+    assert "LO002" in codes(found)
+
+
+def test_entry_locks_honoured():
+    # _read_cold_host is declared entered with _writer_lock held: taking
+    # the leaf lock inside is a descend, not an inversion
+    found = run_passes("""
+        class Collection:
+            def _read_cold_host(self):
+                with self._lock:
+                    pass
+    """, passes=(lockorder,))
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# donation pass
+# ---------------------------------------------------------------------------
+
+def test_dn001_read_after_donation():
+    found = run_passes("""
+        from repro.core import index as ivf
+
+        def bad(state, vec):
+            ivf.insert(state, vec)
+            return state.list_ids
+    """, passes=(donation,))
+    assert codes(found) == ["DN001"]
+    assert "state" in found[0].message
+
+
+def test_dn001_reassignment_is_clean():
+    found = run_passes("""
+        from repro.core import index as ivf
+
+        def good(state, vec):
+            state = ivf.insert(state, vec)
+            return state.list_ids
+    """, passes=(donation,))
+    assert found == []
+
+
+def test_dn001_tuple_reassignment_is_clean():
+    found = run_passes("""
+        from repro.core import index as ivf
+
+        def good(state, vec):
+            state, spilled = ivf.insert(state, vec)
+            return state, spilled
+    """, passes=(donation,))
+    assert found == []
+
+
+def test_dn001_loop_carried_donation():
+    # kill at the bottom of the body reaches the read at the top of the
+    # next iteration
+    found = run_passes("""
+        from repro.core import index as ivf
+
+        def bad(state, vecs):
+            for v in vecs:
+                n = state.num_total
+                ivf.insert(state, v)
+    """, passes=(donation,))
+    assert "DN001" in codes(found)
+
+
+def test_dn001_branch_merge():
+    found = run_passes("""
+        from repro.core import index as ivf
+
+        def bad(state, vec, flag):
+            if flag:
+                ivf.delete(state, vec)
+            return state.list_ids
+    """, passes=(donation,))
+    assert codes(found) == ["DN001"]
+
+
+def test_dn002_shared_attribute_donated():
+    found = run_passes("""
+        from repro.core import index as ivf
+
+        class C:
+            def bad(self, vec):
+                return ivf.insert(self._state, vec)
+    """, passes=(donation,))
+    assert codes(found) == ["DN002"]
+    assert "insert_shared" in found[0].message
+
+
+def test_donation_ignores_unrelated_insert():
+    found = run_passes("""
+        def good(items, x):
+            items.insert(0, x)
+            return items
+    """, passes=(donation,))
+    assert found == []
+
+
+def test_donation_from_import_alias():
+    found = run_passes("""
+        from repro.core.index import delete as kernel_delete
+
+        def bad(state, ids):
+            kernel_delete(state, ids)
+            return state
+    """, passes=(donation,))
+    assert codes(found) == ["DN001"]
+
+
+# ---------------------------------------------------------------------------
+# snapshot-discipline pass
+# ---------------------------------------------------------------------------
+
+def test_sd001_unlocked_write():
+    found = run_passes("""
+        class Collection:
+            def bad(self, st):
+                self._state = st
+    """, passes=(snapshot,))
+    assert codes(found) == ["SD001"]
+
+
+def test_sd001_locked_write_clean():
+    found = run_passes("""
+        class Collection:
+            def good(self, st):
+                with self._lock:
+                    self._state = st
+    """, passes=(snapshot,))
+    assert found == []
+
+
+def test_sd001_mutator_call():
+    found = run_passes("""
+        class Collection:
+            def bad(self):
+                self.counters.update({"queries": 1})
+    """, passes=(snapshot,))
+    assert codes(found) == ["SD001"]
+
+
+def test_sd001_init_exempt():
+    found = run_passes("""
+        class Collection:
+            def __init__(self):
+                self._state = None
+                self.counters = {}
+    """, passes=(snapshot,))
+    assert found == []
+
+
+def test_sd001_other_class_not_guarded():
+    found = run_passes("""
+        class SomethingElse:
+            def fine(self, st):
+                self._state = st
+    """, passes=(snapshot,))
+    assert found == []
+
+
+def test_sd002_unlocked_read():
+    found = run_passes("""
+        class Collection:
+            def bad(self):
+                return self._host_state
+    """, passes=(snapshot,))
+    assert codes(found) == ["SD002"]
+
+
+def test_sd002_locked_read_clean():
+    found = run_passes("""
+        class Collection:
+            def good(self):
+                with self._lock:
+                    return self._host_state
+    """, passes=(snapshot,))
+    assert found == []
+
+
+def test_sd003_stale_republish():
+    found = run_passes("""
+        class Collection:
+            def bad(self):
+                with self._lock:
+                    st = self._state
+                recompute(st)
+                with self._lock:
+                    self._state = st
+    """, passes=(snapshot,))
+    assert "SD003" in codes(found)
+
+
+def test_sd003_same_block_republish_clean():
+    found = run_passes("""
+        class Collection:
+            def good(self):
+                with self._lock:
+                    st = self._state
+                    self._state = st
+    """, passes=(snapshot,))
+    assert codes(found) == []
+
+
+# ---------------------------------------------------------------------------
+# waivers + baseline + repo cleanliness
+# ---------------------------------------------------------------------------
+
+def test_waiver_suppresses_finding():
+    found = run_passes("""
+        class Collection:
+            def tolerated(self, st):
+                # analyze: ok(SD001) single-threaded bootstrap path
+                self._state = st
+    """, passes=(snapshot,))
+    assert found == []
+
+
+def test_waiver_is_per_code():
+    found = run_passes("""
+        class Collection:
+            def bad(self, st):
+                # analyze: ok(DN001) wrong code on purpose
+                self._state = st
+    """, passes=(snapshot,))
+    assert codes(found) == ["SD001"]
+
+
+def test_bare_waiver_reports_wv001():
+    # a reasonless waiver does NOT suppress — the original finding stays
+    # and the malformed waiver is itself reported.  (The REASON placeholder
+    # is stripped so this file's own line is a well-formed waiver for the
+    # analyzer's line-wise scan of tests/.)
+    found = run_passes("""
+        class Collection:
+            def bad(self, st):
+                self._state = st  # analyze: ok(SD001) REASON
+    """.replace(" REASON", ""), passes=(snapshot,))
+    assert set(codes(found)) == {"SD001", "WV001"}
+
+
+def test_baseline_gates_exit_code(tmp_path):
+    from tools.analyze.__main__ import main
+    fixture = tmp_path / "mod.py"
+    fixture.write_text(textwrap.dedent("""
+        class Collection:
+            def bad(self, st):
+                self._state = st
+    """))
+    baseline = tmp_path / "baseline.txt"
+    assert main([str(fixture), "--root", str(tmp_path)]) == 1
+    assert main([str(fixture), "--root", str(tmp_path),
+                 "--baseline", str(baseline), "--write-baseline"]) == 0
+    assert "SD001" in baseline.read_text()
+    assert main([str(fixture), "--root", str(tmp_path),
+                 "--baseline", str(baseline)]) == 0
+
+
+def test_repo_is_clean_against_committed_baseline():
+    import os
+    from tools.analyze.__main__ import main
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rc = main(["src", "tests", "--root", root,
+               "--baseline", os.path.join(root, "tools/analyze/baseline.txt")])
+    assert rc == 0
+
+
+def test_static_hierarchy_matches_runtime():
+    assert invariants.LOCK_LEVELS == locking.LEVELS
+
+
+# ---------------------------------------------------------------------------
+# runtime lock-order validator
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def v():
+    return locking.LockOrderValidator()
+
+
+def test_runtime_descending_order_clean(v):
+    wl = locking.make_rlock("_writer_lock", _validator=v)
+    ll = locking.make_rlock("_lock", _validator=v)
+    with wl:
+        with ll:
+            pass
+    assert v.drain() == []
+
+
+def test_runtime_inversion_recorded(v):
+    wl = locking.make_rlock("_writer_lock", _validator=v)
+    ll = locking.make_rlock("_lock", _validator=v)
+    with ll:
+        with wl:
+            pass
+    out = v.drain()
+    assert len(out) == 1 and "hierarchy inversion" in out[0]
+
+
+def test_runtime_rlock_reentry_clean(v):
+    ll = locking.make_rlock("_lock", _validator=v)
+    with ll:
+        with ll:
+            pass
+    assert v.drain() == []
+
+
+def test_runtime_nonreentrant_reacquire_recorded(v):
+    lk = locking.make_lock("_lock", _validator=v)
+    assert lk.acquire()
+    assert not lk.acquire(blocking=False)
+    lk.release()
+    out = v.drain()
+    assert len(out) == 1 and "self-deadlock" in out[0]
+
+
+def test_runtime_same_level_cycle_recorded(v):
+    # two leaf locks taken in opposite orders: legal per level, but the
+    # cumulative acquisition graph gains a cycle
+    a = locking.make_lock("_lock", _validator=v)
+    b = locking.make_lock("_lock", _validator=v)
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    out = v.drain()
+    assert any("cycle" in msg for msg in out)
+
+
+def test_runtime_reset_clears_graph(v):
+    a = locking.make_lock("_lock", _validator=v)
+    b = locking.make_lock("_lock", _validator=v)
+    with a:
+        with b:
+            pass
+    v.reset()
+    with b:
+        with a:
+            pass
+    assert v.drain() == []  # opposite edge alone is not a cycle
+
+
+def test_factories_plain_without_debug(monkeypatch):
+    monkeypatch.delenv("AME_DEBUG_LOCKS", raising=False)
+    assert not hasattr(locking.make_lock("_lock"), "level")
+    assert not hasattr(locking.make_rlock("_writer_lock"), "level")
+
+
+def test_factories_reject_unknown_name(v):
+    with pytest.raises(ValueError):
+        locking.make_lock("_mystery_lock", _validator=v)

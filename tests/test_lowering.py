@@ -6,7 +6,6 @@ param/cache/batch shardings, train/prefill/decode step construction — on a
 1x1 mesh with reduced configs, so a broken PartitionSpec rule or cache spec
 fails in CI, not at sweep time.  Plus fault-tolerance unit coverage.
 """
-import numpy as np
 import pytest
 
 import jax

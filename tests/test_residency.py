@@ -20,8 +20,6 @@ invariants:
 * shard-local spill rebalance: a full shard's rebuild hands its overflow
   rows to an underfull sibling with zero lost ids.
 """
-import os
-import tempfile
 import threading
 import time
 

@@ -2,8 +2,6 @@
 import threading
 import time
 
-import pytest
-
 from repro.core.scheduler import Task, WindowedScheduler
 
 

@@ -34,7 +34,7 @@ def test_train_step_reduces_loss():
     batch = api.synth_batch(jax.random.PRNGKey(1), cfg, "train", 4, 32)
     losses = []
     key = jax.random.PRNGKey(2)
-    for i in range(30):
+    for _ in range(30):
         params, opt, m = step(params, opt, batch, key)   # overfit one batch
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] - 0.5, losses[::10]
@@ -73,7 +73,7 @@ def test_grad_compression_still_trains(scheme):
     batch = api.synth_batch(jax.random.PRNGKey(1), cfg, "train", 4, 16)
     first = None
     key = jax.random.PRNGKey(0)
-    for i in range(15):
+    for _ in range(15):
         key, k = jax.random.split(key)
         params, opt, m = step(params, opt, batch, k)
         first = first if first is not None else float(m["loss"])
@@ -110,7 +110,7 @@ def test_trainer_end_to_end_with_restore(tmp_path):
     tc = TrainConfig(learning_rate=1e-3, warmup_steps=2)
     ds = TokenDataset(None, cfg.vocab_size, seq_len=16, batch_size=2)
     tr = Trainer(cfg, tc, checkpoint_dir=str(tmp_path), checkpoint_every=5)
-    hist = tr.train(iter(ds), steps=6, log_every=2)
+    tr.train(iter(ds), steps=6, log_every=2)
     assert tr.step_num == 6
     assert tr.ckpt.latest_step() == 5
     # preemption: request checkpoint, loop must stop at the boundary

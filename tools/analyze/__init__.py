@@ -1,0 +1,8 @@
+"""Repo-specific invariant analyzer: lock-order (LO*), donation-safety
+(DN*), and snapshot-discipline (SD*) passes.  Run as::
+
+    python -m tools.analyze src tests [--baseline tools/analyze/baseline.txt]
+
+See docs/ARCHITECTURE.md, "Invariants & analysis", for the invariant each
+error code enforces.
+"""

@@ -1,0 +1,99 @@
+"""CLI driver: run the three passes over the given paths and gate on the
+committed baseline.
+
+    python -m tools.analyze src tests --baseline tools/analyze/baseline.txt
+
+Exit status: 0 when every finding is waived or baselined, 1 when new
+findings exist, 2 on usage errors.  ``--write-baseline`` rewrites the
+baseline from the current findings (for adopting the tool on a codebase
+with accepted pre-existing violations; this repo's baseline is empty).
+Stale baseline entries — fingerprints that no longer occur — are reported
+as warnings so the baseline only ever shrinks silently, never rots.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from tools.analyze import donation, lockorder, snapshot
+from tools.analyze.common import Finding, apply_waivers, iter_source_files
+
+PASSES = (lockorder, donation, snapshot)
+
+
+def read_baseline(path: str) -> List[str]:
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as fh:
+        return [ln.strip() for ln in fh
+                if ln.strip() and not ln.startswith("#")]
+
+
+def write_baseline(path: str, findings: List[Finding]) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("# Accepted pre-existing analyzer findings "
+                 "(path|CODE|message fingerprints).\n"
+                 "# New findings not listed here fail CI; fix them or add "
+                 "an inline waiver\n"
+                 "# (`# analyze: ok(CODE) reason`) instead of growing "
+                 "this file.\n")
+        for fp in sorted({f.fingerprint() for f in findings}):
+            fh.write(fp + "\n")
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="lock-order / donation-safety / snapshot-discipline "
+                    "invariant analyzer")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to analyze (repo-relative)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file of accepted finding fingerprints")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current findings")
+    ap.add_argument("--root", default=os.getcwd(),
+                    help="repo root paths are resolved against")
+    args = ap.parse_args(argv)
+
+    try:
+        files = iter_source_files(args.paths, args.root)
+    except (OSError, SyntaxError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    findings: List[Finding] = []
+    for p in PASSES:
+        findings.extend(p.run(files))
+    findings = apply_waivers(files, findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+
+    if args.write_baseline:
+        if args.baseline is None:
+            print("error: --write-baseline requires --baseline",
+                  file=sys.stderr)
+            return 2
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} fingerprint(s) to {args.baseline}")
+        return 0
+
+    accepted = set(read_baseline(args.baseline) if args.baseline else [])
+    new = [f for f in findings if f.fingerprint() not in accepted]
+    seen = {f.fingerprint() for f in findings}
+    stale = sorted(fp for fp in accepted if fp not in seen)
+
+    for f in new:
+        print(f.format())
+    for fp in stale:
+        print(f"warning: stale baseline entry: {fp}", file=sys.stderr)
+    summary = (f"{len(findings)} finding(s), {len(new)} new, "
+               f"{len(findings) - len(new)} baselined, {len(stale)} stale "
+               f"baseline entr(y/ies), {len(files)} file(s) analyzed")
+    print(summary, file=sys.stderr)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

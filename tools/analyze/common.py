@@ -1,0 +1,392 @@
+"""Shared machinery for the static passes: findings, waivers, source files,
+and the lock-held AST walker.
+
+Waivers: a finding is suppressed by an inline comment on the flagged line
+(or the line directly above it):
+
+    # analyze: ok(CODE) reason the violation is intentional
+
+The reason string is mandatory — a bare ``ok(CODE)`` is itself reported as
+WV001.  Waivers are per-code: ``ok(SD002)`` does not silence a DN001 on
+the same line.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.analyze import invariants as inv
+
+_WAIVER_RE = re.compile(r"#\s*analyze:\s*ok\((?P<code>[A-Z]{2}\d{3})\)"
+                        r"\s*(?P<reason>.*?)\s*$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline file (line
+        numbers churn with unrelated edits; path+code+message rarely do)."""
+        return f"{self.path}|{self.code}|{self.message}"
+
+
+class SourceFile:
+    """One parsed Python file plus its waiver comments."""
+
+    def __init__(self, path: str, relpath: str, text: str) -> None:
+        self.path = path
+        self.relpath = relpath
+        self.text = text
+        self.tree = ast.parse(text, filename=path)
+        self.lines = text.splitlines()
+        # line -> {code: reason}
+        self.waivers: Dict[int, Dict[str, str]] = {}
+        self.bad_waivers: List[int] = []
+        for i, line in enumerate(self.lines, start=1):
+            m = _WAIVER_RE.search(line)
+            if not m:
+                continue
+            if not m.group("reason"):
+                self.bad_waivers.append(i)
+            else:
+                self.waivers.setdefault(i, {})[m.group("code")] = \
+                    m.group("reason")
+
+    def waived(self, line: int, code: str) -> bool:
+        for ln in (line, line - 1):
+            if code in self.waivers.get(ln, {}):
+                return True
+        return False
+
+
+def iter_source_files(paths: Iterable[str], root: str) -> List[SourceFile]:
+    out = []
+    for p in paths:
+        p = os.path.join(root, p) if not os.path.isabs(p) else p
+        if os.path.isfile(p) and p.endswith(".py"):
+            files = [p]
+        else:
+            files = []
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames
+                               if d != "__pycache__" and
+                               not d.startswith(".")]
+                files.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames) if f.endswith(".py"))
+        for f in sorted(files):
+            with open(f, encoding="utf-8") as fh:
+                text = fh.read()
+            out.append(SourceFile(f, os.path.relpath(f, root), text))
+    return out
+
+
+def apply_waivers(files: List[SourceFile],
+                  findings: List[Finding]) -> List[Finding]:
+    """Drop waived findings; surface malformed waivers as WV001."""
+    by_rel = {f.relpath: f for f in files}
+    kept = []
+    for fd in findings:
+        src = by_rel.get(fd.path)
+        if src is not None and src.waived(fd.line, fd.code):
+            continue
+        kept.append(fd)
+    for src in files:
+        for ln in src.bad_waivers:
+            kept.append(Finding(src.relpath, ln, "WV001",
+                                "waiver without a reason string "
+                                "(use `# analyze: ok(CODE) reason`)"))
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+_NESTED = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def walk_pruned(node: ast.AST):
+    """Like ast.walk but does not descend into nested function/lambda
+    bodies — their statements don't execute at the enclosing statement's
+    time (nested defs are analyzed as functions in their own right)."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if n is not node and isinstance(n, _NESTED):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def module_aliases(tree: ast.Module,
+                   module: str) -> Tuple[Set[str], Dict[str, str]]:
+    """(names aliasing `module` itself, local-name -> member imported from
+    it) for one file.  Covers ``import pkg.mod as m``, ``from pkg import
+    mod``, and ``from pkg.mod import member [as alias]``."""
+    mod_aliases: Set[str] = set()
+    member_aliases: Dict[str, str] = {}
+    parent, _, last = module.rpartition(".")
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == module and a.asname:
+                    mod_aliases.add(a.asname)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == module:
+                for a in node.names:
+                    member_aliases[a.asname or a.name] = a.name
+            elif node.module == parent:
+                for a in node.names:
+                    if a.name == last:
+                        mod_aliases.add(a.asname or a.name)
+    return mod_aliases, member_aliases
+
+
+def attr_name(node: ast.AST) -> Optional[str]:
+    """Terminal attribute/function name of a call target or attribute."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def receiver_src(node: ast.AST) -> str:
+    """Source text of an attribute's receiver (``self`` in ``self._lock``)."""
+    if isinstance(node, ast.Attribute):
+        try:
+            return ast.unparse(node.value)
+        except Exception:
+            return "<expr>"
+    return ""
+
+
+def lock_of(expr: ast.AST) -> Optional[Tuple[str, str]]:
+    """(receiver, lock_name) when `expr` denotes a hierarchy lock.
+
+    Matches ``X._lock`` / ``X._writer_lock`` / ``X._admit_lock`` and the
+    subscripted ``X._rebuild_locks[i]``.
+    """
+    if isinstance(expr, ast.Subscript):
+        expr = expr.value
+    if isinstance(expr, ast.Attribute) and expr.attr in inv.LOCK_LEVELS:
+        return receiver_src(expr), expr.attr
+    return None
+
+
+@dataclass(frozen=True)
+class HeldLock:
+    receiver: str
+    name: str
+
+    @property
+    def level(self) -> int:
+        return inv.LOCK_LEVELS[self.name]
+
+
+def min_held_level(held: Set[HeldLock]) -> Optional[int]:
+    return min((h.level for h in held), default=None)
+
+
+class FunctionIndex:
+    """Every function/method definition across the analyzed files, with the
+    lock levels it acquires directly and the names it calls — the input to
+    the lock-ceiling fixpoint in lockorder.py."""
+
+    def __init__(self, files: List[SourceFile]) -> None:
+        # name -> list of (qualname, direct_level, callee_names)
+        self.defs: Dict[str, List[Tuple[str, int, Set[str]]]] = {}
+        for src in files:
+            for cls, fn in iter_functions(src.tree):
+                qual = f"{cls}.{fn.name}" if cls else fn.name
+                level = 0
+                callees: Set[str] = set()
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.withitem):
+                        lk = lock_of(node.context_expr)
+                        if lk is None and isinstance(node.context_expr,
+                                                     ast.Call):
+                            nm = attr_name(node.context_expr.func)
+                            if nm in inv.CM_HELPERS:
+                                lk = ("", inv.CM_HELPERS[nm])
+                        if lk is not None:
+                            level = max(level, inv.LOCK_LEVELS[lk[1]])
+                    elif isinstance(node, ast.Call):
+                        nm = attr_name(node.func)
+                        if nm == "acquire" and isinstance(node.func,
+                                                          ast.Attribute):
+                            lk = lock_of(node.func.value)
+                            if lk is not None:
+                                level = max(level, inv.LOCK_LEVELS[lk[1]])
+                        elif nm is not None:
+                            callees.add(nm)
+                self.defs.setdefault(fn.name, []).append(
+                    (qual, level, callees))
+
+
+def iter_functions(tree: ast.Module):
+    """Yield (class_name_or_None, FunctionDef) for every def, including
+    nested ones (each yielded once, attributed to its enclosing class)."""
+
+    def walk(node, cls):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from walk(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield cls, child
+                yield from walk(child, cls)
+            else:
+                yield from walk(child, cls)
+
+    yield from walk(tree, None)
+
+
+# ---------------------------------------------------------------------------
+# Lock-held walker
+# ---------------------------------------------------------------------------
+
+class LockWalker:
+    """Walks one function's statements maintaining the *maybe-held* lock
+    set.  Branchy flows are merged optimistically (a lock held on any path
+    out of an ``if``/``try`` is treated as held afterwards) — sound for
+    inversion detection (never misses a held lock), at the cost of rare
+    false positives, which waivers cover.
+
+    Subclass hooks:
+      on_acquire(node, lock, held)   before `lock` joins `held`
+      on_call(node, name, held)      every call except lock acquire/release
+      on_statement(stmt, held)       every simple statement + each
+                                     structured statement's header
+      on_lock_exit(held)             after a with-block releases its lock
+    """
+
+    def __init__(self, src: SourceFile) -> None:
+        self.src = src
+
+    # -- hooks (default: no-ops) ----------------------------------------
+    def on_acquire(self, node, lock: HeldLock, held: Set[HeldLock]):
+        pass
+
+    def on_call(self, node, name: str, held: Set[HeldLock]):
+        pass
+
+    def on_statement(self, stmt, held: Set[HeldLock]):
+        pass
+
+    def on_lock_exit(self, held: Set[HeldLock]):
+        pass
+
+    # -- driver ---------------------------------------------------------
+    def run(self, fn: ast.FunctionDef, entry: Set[HeldLock]) -> None:
+        self.visit_block(fn.body, set(entry))
+
+    def visit_block(self, stmts, held: Set[HeldLock]) -> Set[HeldLock]:
+        held = set(held)
+        for stmt in stmts:
+            held = self.visit_stmt(stmt, held)
+        return held
+
+    def _scan_calls(self, node, held: Set[HeldLock]) -> None:
+        """Report calls in an expression tree (excluding nested defs and
+        lock acquire/release, which the structural walk handles)."""
+        for sub in walk_pruned(node):
+            if isinstance(sub, ast.Call):
+                nm = attr_name(sub.func)
+                if nm in ("acquire", "release") and isinstance(
+                        sub.func, ast.Attribute) and \
+                        lock_of(sub.func.value) is not None:
+                    continue
+                if nm is not None:
+                    self.on_call(sub, nm, held)
+
+    def visit_stmt(self, stmt, held: Set[HeldLock]) -> Set[HeldLock]:
+        if isinstance(stmt, ast.With):
+            return self._visit_with(stmt, held)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return held           # nested defs are analyzed independently
+        if isinstance(stmt, ast.If):
+            self.on_statement(stmt, held)
+            self._scan_calls(stmt.test, held)
+            h1 = self.visit_block(stmt.body, held)
+            h2 = self.visit_block(stmt.orelse, held)
+            return h1 | h2
+        if isinstance(stmt, (ast.For, ast.While)):
+            self.on_statement(stmt, held)
+            header = stmt.iter if isinstance(stmt, ast.For) else stmt.test
+            self._scan_calls(header, held)
+            hb = self.visit_block(stmt.body, held)
+            hb |= self.visit_block(stmt.orelse, held | hb)
+            return held | hb
+        if isinstance(stmt, ast.Try):
+            self.on_statement(stmt, held)
+            hb = self.visit_block(stmt.body, held)
+            merged = set(hb)
+            for handler in stmt.handlers:
+                # an exception may fire before or after any acquire in the
+                # body: enter the handler with the maybe-held union
+                merged |= self.visit_block(handler.body, held | hb)
+            merged |= self.visit_block(stmt.orelse, hb)
+            if stmt.finalbody:
+                merged = self.visit_block(stmt.finalbody, merged)
+            return merged
+        # simple statement
+        self.on_statement(stmt, held)
+        self._scan_calls(stmt, held)
+        return self._apply_acquire_release(stmt, held)
+
+    def _visit_with(self, stmt: ast.With, held: Set[HeldLock]):
+        self.on_statement(stmt, held)
+        acquired = []
+        for item in stmt.items:
+            self._scan_calls(item.context_expr, held)
+            lk = lock_of(item.context_expr)
+            if lk is None and isinstance(item.context_expr, ast.Call):
+                nm = attr_name(item.context_expr.func)
+                if nm in inv.CM_HELPERS:
+                    lk = (receiver_src(item.context_expr.func),
+                          inv.CM_HELPERS[nm])
+            if lk is not None:
+                lock = HeldLock(*lk)
+                self.on_acquire(item.context_expr, lock, held)
+                held = held | {lock}
+                acquired.append(lock)
+        inner = self.visit_block(stmt.body, held)
+        out = inner - set(acquired)
+        if acquired:
+            self.on_lock_exit(out)
+        return out
+
+    def _apply_acquire_release(self, stmt, held: Set[HeldLock]):
+        """Track bare ``X.<lock>.acquire()`` / ``.release()`` calls and
+        net-acquiring helper calls linearly within a block."""
+        for node in walk_pruned(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            nm = attr_name(node.func)
+            if nm in ("acquire", "release") and isinstance(node.func,
+                                                           ast.Attribute):
+                lk = lock_of(node.func.value)
+                if lk is None:
+                    continue
+                lock = HeldLock(*lk)
+                if nm == "acquire":
+                    self.on_acquire(node, lock, held)
+                    held = held | {lock}
+                else:
+                    held = held - {lock}
+                    self.on_lock_exit(held)
+            elif nm in inv.NET_ACQUIRE_HELPERS:
+                for lname in inv.NET_ACQUIRE_HELPERS[nm]:
+                    held = held | {HeldLock(receiver_src(node.func), lname)}
+        return held

@@ -1,0 +1,175 @@
+"""Donation-safety pass: DN001 (read after donation) and DN002 (shared
+attribute donated).
+
+``repro.core.index`` jit-compiles its mutators with ``donate_argnums``:
+the caller's device buffer is consumed and aliased into the output.  The
+contract is linear — after ``st2 = ivf.insert(st, ...)`` the name ``st``
+is dead.  PR 2's bug class was exactly a read of the donated operand (the
+fix introduced the copying ``insert_shared``/``delete_shared`` variants).
+
+This pass walks each function linearly.  Per statement, in order:
+
+1. every ``Name`` load is checked against the dead set (DN001),
+2. donating calls mark their donated-position ``Name`` arguments dead and
+   flag ``Attribute`` arguments (``self._state`` — a shared buffer someone
+   else may still read) as DN002,
+3. assignment targets are removed from the dead set (reassignment
+   resurrects the name — the idiomatic ``state = ivf.insert(state, ...)``
+   is clean because the read in step 1 precedes the kill in step 2).
+
+Calls resolve against ``invariants.DONATING_MODULE`` only: through a
+module alias (``ivf.insert``), a name imported from it, or a bare name
+inside the module itself — ``somelist.insert(x)`` never matches.  Branches
+merge their dead sets (dead on either side stays dead); loop bodies run
+twice so a kill at the bottom reaches a read at the top.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analyze import invariants as inv
+from tools.analyze.common import (Finding, SourceFile, iter_functions,
+                                  module_aliases, walk_pruned)
+
+
+class _DonationChecker:
+    def __init__(self, src: SourceFile, mod_aliases: Set[str],
+                 member_aliases: Dict[str, str], in_module: bool,
+                 findings: List[Finding]) -> None:
+        self.src = src
+        self.mod_aliases = mod_aliases
+        self.member_aliases = member_aliases
+        self.in_module = in_module
+        self.findings = findings
+
+    # -- call resolution -------------------------------------------------
+    def donating_callee(self, call: ast.Call) -> Optional[str]:
+        """Canonical DONATING name when `call` targets the kernel module."""
+        f = call.func
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+            if f.value.id in self.mod_aliases and f.attr in inv.DONATING:
+                return f.attr
+        elif isinstance(f, ast.Name):
+            member = self.member_aliases.get(f.id)
+            if member in inv.DONATING:
+                return member
+            if self.in_module and f.id in inv.DONATING:
+                return f.id
+        return None
+
+    # -- driver ----------------------------------------------------------
+    def run(self, fn: ast.FunctionDef) -> None:
+        self.visit_block(fn.body, {})
+
+    def visit_block(self, stmts, dead: Dict[str, Tuple[int, str]]):
+        dead = dict(dead)
+        for stmt in stmts:
+            dead = self.visit_stmt(stmt, dead)
+        return dead
+
+    def visit_stmt(self, stmt, dead):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return dead
+        if isinstance(stmt, ast.If):
+            self._check_expr(stmt.test, dead)
+            d1 = self.visit_block(stmt.body, dead)
+            d2 = self.visit_block(stmt.orelse, dead)
+            return {**d1, **d2}
+        if isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.For):
+                self._check_expr(stmt.iter, dead)
+            else:
+                self._check_expr(stmt.test, dead)
+            d = dead
+            for _ in range(2):  # second pass: bottom-of-body kills reach
+                d2 = dict(d)    # top-of-body reads of the next iteration
+                if isinstance(stmt, ast.For):
+                    self._kill_targets(stmt.target, d2)
+                d = self.visit_block(stmt.body, d2)
+            d.update(self.visit_block(stmt.orelse, d))
+            return {**dead, **d}
+        if isinstance(stmt, ast.Try):
+            db = self.visit_block(stmt.body, dead)
+            merged = dict(db)
+            for handler in stmt.handlers:
+                merged.update(self.visit_block(handler.body,
+                                               {**dead, **db}))
+            merged.update(self.visit_block(stmt.orelse, db))
+            if stmt.finalbody:
+                merged = self.visit_block(stmt.finalbody, merged)
+            return merged
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._check_expr(item.context_expr, dead)
+                dead = self._apply_donations(item.context_expr, dead)
+                if item.optional_vars is not None:
+                    self._kill_targets(item.optional_vars, dead)
+            return self.visit_block(stmt.body, dead)
+        # simple statement: reads -> donations -> stores
+        self._check_expr(stmt, dead)
+        dead = self._apply_donations(stmt, dead)
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    self._kill_targets(t, dead)
+        return dead
+
+    # -- steps -----------------------------------------------------------
+    def _check_expr(self, node, dead) -> None:
+        for sub in walk_pruned(node):
+            if isinstance(sub, ast.Name) and \
+                    isinstance(sub.ctx, ast.Load) and sub.id in dead:
+                line, callee = dead[sub.id]
+                self.findings.append(Finding(
+                    self.src.relpath, sub.lineno, "DN001",
+                    f"reads `{sub.id}` after it was donated to "
+                    f"{callee}() on line {line}; its buffer is dead — "
+                    f"reassign the result or use a copying variant"))
+
+    def _apply_donations(self, node, dead):
+        dead = dict(dead)
+        for sub in walk_pruned(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            callee = self.donating_callee(sub)
+            if callee is None:
+                continue
+            for pos in inv.DONATING[callee]:
+                if pos >= len(sub.args):
+                    continue
+                arg = sub.args[pos]
+                if isinstance(arg, ast.Name):
+                    dead[arg.id] = (sub.lineno, callee)
+                elif isinstance(arg, ast.Attribute):
+                    hint = inv.SHARED_VARIANTS.get(callee)
+                    hint = f"; use {hint}() to copy instead" if hint else ""
+                    self.findings.append(Finding(
+                        self.src.relpath, arg.lineno, "DN002",
+                        f"donates shared attribute "
+                        f"`{ast.unparse(arg)}` to {callee}(); other "
+                        f"readers may still hold this buffer" + hint))
+        return dead
+
+    def _kill_targets(self, target, dead) -> None:
+        for sub in ast.walk(target):
+            if isinstance(sub, ast.Name):
+                dead.pop(sub.id, None)
+
+
+def run(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    mod_tail = "/" + inv.DONATING_MODULE.replace(".", "/") + ".py"
+    for src in files:
+        mod_aliases, member_aliases = module_aliases(
+            src.tree, inv.DONATING_MODULE)
+        in_module = src.relpath.replace("\\", "/").endswith(mod_tail)
+        if not (mod_aliases or member_aliases or in_module):
+            continue
+        checker_args = (mod_aliases, member_aliases, in_module, findings)
+        for _, fn in iter_functions(src.tree):
+            _DonationChecker(src, *checker_args).run(fn)
+    return findings

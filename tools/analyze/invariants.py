@@ -1,0 +1,154 @@
+"""Declarative model of the repo's concurrency invariants.
+
+This is the single place the static passes read their facts from; the
+passes themselves are generic AST machinery.  Three registries:
+
+* the lock hierarchy (mirrors `repro.core.locking.LEVELS` — a test asserts
+  the two stay identical),
+* the donating-kernel registry (which callees consume their argument's
+  buffers, per `jax.jit(donate_argnums=...)` in `repro.core.index`),
+* the guarded-state registry (which fields of which classes may only be
+  written/read under the snapshot/writer locks).
+
+Error codes emitted by the passes (each is documented with its invariant
+in docs/ARCHITECTURE.md, "Invariants & analysis"):
+
+    LO001  lock acquisition inverts the documented hierarchy
+    LO002  call may acquire a higher-level lock than one already held
+    DN001  variable read after being passed to a donating kernel
+    DN002  shared attribute passed directly to a donating kernel
+    SD001  guarded state field written outside a _lock/_writer_lock block
+    SD002  shared mutable field read without _lock/_writer_lock held
+    SD003  value read under a lock republished under a later, separate
+           lock acquisition (lost-update window)
+    WV001  waiver comment without a reason string
+"""
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# Lock hierarchy: name -> level; acquisition order must strictly descend.
+# MUST mirror repro.core.locking.LEVELS (tests/test_analyze.py asserts it).
+# ---------------------------------------------------------------------------
+LOCK_LEVELS = {
+    "_rebuild_locks": 40,   # per-shard rebuild serialization (outermost)
+    "_admit_lock": 30,      # ResidencyManager admission/eviction
+    "_writer_lock": 20,     # per-collection writer serialization
+    "_lock": 10,            # leaf: pointer-swap/counter/registry sections
+}
+
+# Context-manager helpers that acquire a hierarchy lock for their body.
+CM_HELPERS = {
+    "_hot_writer": "_writer_lock",      # Collection._hot_writer()
+}
+
+# Helpers that return with a hierarchy lock HELD (caller must release).
+NET_ACQUIRE_HELPERS = {
+    "_acquire_writer_hot": ("_writer_lock",),
+}
+
+# Methods assumed entered with locks already held ("caller holds X"
+# contracts, stated in their docstrings).  Keyed by "Class.method".
+ENTRY_LOCKS = {
+    "Collection._read_cold_host": ("_writer_lock",),
+    "Collection._host_view_locked": ("_writer_lock",),
+    "Collection._write_host_state": ("_writer_lock",),
+    "Collection._rebalance_spill_host": ("_writer_lock",),
+    "Collection._log_delta": ("_writer_lock",),
+    "Collection._build_admitted": (),
+}
+
+# Known lock ceilings for names the corpus-wide fixpoint cannot see or
+# should pin (the highest hierarchy lock a call into this name may acquire
+# transitively).  The fixpoint in lockorder.py extends this over every
+# function defined in the analyzed files.
+CEILING_SEEDS = {
+    "make_room_for": "_admit_lock",
+    "promote": "_admit_lock",
+    "ensure_hot": "_admit_lock",
+    "register": "_admit_lock",
+    "_acquire_writer_hot": "_admit_lock",
+    "_hot_writer": "_admit_lock",
+    "demote": "_writer_lock",
+    "rebuild": "_rebuild_locks",
+    "build": "_admit_lock",
+    "insert": "_admit_lock",
+    "delete": "_admit_lock",
+    "query": "_admit_lock",
+}
+
+# ---------------------------------------------------------------------------
+# Donating kernels (repro.core.index): callee name -> donated positional
+# argument indices.  A variable passed in a donated position is dead — its
+# device buffer now belongs to the kernel's output (the bug class
+# insert_shared/delete_shared was introduced to fix).
+# ---------------------------------------------------------------------------
+DONATING = {
+    "insert": (0,),
+    "delete": (0,),
+    "replay": (0,),
+    "replay_insert": (0,),
+    "replay_delete": (0,),
+    "_insert": (0,),
+    "_delete": (0,),
+}
+
+# The module whose members the donating names resolve against; calls are
+# only flagged through an alias of this module (`from repro.core import
+# index as ivf` -> `ivf.insert(...)`), a name imported from it, or a bare
+# name inside the module itself.  `somelist.insert(...)` never matches.
+DONATING_MODULE = "repro.core.index"
+
+# Copying (shared-safe) variants — never flagged, and suggested in the
+# DN002 message.
+SHARED_VARIANTS = {"insert": "insert_shared", "delete": "delete_shared"}
+
+# ---------------------------------------------------------------------------
+# Guarded state: class -> fields that may only be WRITTEN while holding
+# that object's _lock or _writer_lock (SD001).  `__init__` is exempt (the
+# object is unpublished).
+# ---------------------------------------------------------------------------
+GUARDED_WRITE_FIELDS = {
+    "Collection": {
+        "_state", "_host_state", "_residency_tier", "_cold_dir",
+        "_cold_step", "_version", "_epoch", "_next_id", "_built",
+        "_last_used", "_shard_versions", "_shard_pressure", "_spill_floors",
+        "_delta_logs", "_delta_overflow", "counters",
+    },
+    "ResidencyManager": {
+        "_collections", "_reserved", "promotions", "demotions", "evictions",
+        "cache_evictions", "cold_hits", "over_budget_events",
+        "_promote_s_total", "_promote_s_max", "_demote_s_total",
+    },
+    "MaintenanceController": {
+        "triggered", "demotions_triggered", "failed", "last_error",
+        "_inflight", "_backoff_until",
+    },
+    "MemoryService": {
+        "_collections", "_pending", "_maintenance", "_scheduler",
+    },
+    "StackCache": {
+        "_entries", "_dropped", "hits", "misses",
+    },
+}
+
+# Fields whose READ outside a lock is flagged (SD002): the shared mutable
+# pointers/containers a torn or stale read of which is a real bug.
+# Monotonic counters (_version, _next_id, counters) are deliberately not
+# listed — an unlocked read of those is at worst slightly stale.
+GUARDED_READ_FIELDS = {
+    "Collection": {
+        "_state", "_host_state", "_residency_tier", "_cold_dir",
+        "_cold_step", "_delta_logs", "_delta_overflow", "_shard_pressure",
+        "_spill_floors", "_shard_versions",
+    },
+    "ResidencyManager": {"_reserved"},
+    "MaintenanceController": {"_inflight", "_backoff_until"},
+    "MemoryService": {"_pending"},
+    "StackCache": {"_entries"},
+}
+
+# Locks that satisfy the SD passes' "held" requirement.
+GUARDING_LOCKS = {"_lock", "_writer_lock"}
+
+ALL_CODES = ("LO001", "LO002", "DN001", "DN002",
+             "SD001", "SD002", "SD003", "WV001")

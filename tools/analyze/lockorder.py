@@ -1,0 +1,101 @@
+"""Lock-order pass: LO001 (hierarchy inversion) and LO002 (call whose lock
+ceiling exceeds a held lock's level).
+
+The hierarchy (``invariants.LOCK_LEVELS``) says acquisition order must
+strictly descend: a thread holding ``_lock`` (10) must not acquire
+``_writer_lock`` (20), ``_admit_lock`` (30) or a ``_rebuild_locks`` entry
+(40).  LO001 flags direct acquisitions (``with``/``.acquire()``/helpers)
+that violate this.  LO002 extends the check one call deep: each function
+name gets a *ceiling* — the highest hierarchy level a call to it may
+acquire — and calling a name whose ceiling exceeds the lowest held level
+is flagged.
+
+Ceilings are the max of ``invariants.CEILING_SEEDS`` (hand-pinned for the
+admission/maintenance entry points) and the locks each same-named
+definition acquires *directly*.  They are deliberately NOT propagated
+transitively through the call graph: AST analysis merges functions by
+bare name (it cannot resolve receivers), and a transitive fixpoint lets
+one ubiquitous name (``submit``, ``map``, ``save``) glue the whole corpus
+into a single component whose ceiling is the global max — all noise, no
+signal.  Inversions buried deeper than one call are the runtime
+validator's job (``repro.core.locking``), which sees the real dynamic
+call stack instead of a name-merged approximation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from tools.analyze import invariants as inv
+from tools.analyze.common import (Finding, FunctionIndex, HeldLock,
+                                  LockWalker, SourceFile, iter_functions,
+                                  min_held_level, module_aliases)
+
+
+def compute_ceilings(index: FunctionIndex) -> Dict[str, int]:
+    """name -> max(seeded ceiling, highest directly acquired level)."""
+    ceil: Dict[str, int] = {}
+    for name, lvl in inv.CEILING_SEEDS.items():
+        ceil[name] = inv.LOCK_LEVELS[lvl]
+    for name, defs in index.defs.items():
+        direct = max(d[1] for d in defs)
+        ceil[name] = max(ceil.get(name, 0), direct)
+    return ceil
+
+
+class _LockOrderWalker(LockWalker):
+    def __init__(self, src: SourceFile, ceilings: Dict[str, int],
+                 kernel_mods: Set[str], findings: List[Finding]) -> None:
+        super().__init__(src)
+        self.ceilings = ceilings
+        self.kernel_mods = kernel_mods
+        self.findings = findings
+
+    def on_acquire(self, node, lock: HeldLock, held: Set[HeldLock]) -> None:
+        if any(h.name == lock.name for h in held):
+            return  # same-name re-acquire: RLock re-entry or sibling
+            # instance at equal level, both legal under the hierarchy
+        low = min_held_level(held)
+        if low is not None and lock.level > low:
+            holder = min(held, key=lambda h: h.level)
+            self.findings.append(Finding(
+                self.src.relpath, node.lineno, "LO001",
+                f"acquires {lock.name} (level {lock.level}) while holding "
+                f"{holder.name} (level {holder.level}); lock order must "
+                f"descend rebuild > admit > writer > leaf"))
+
+    def on_call(self, node, name: str, held: Set[HeldLock]) -> None:
+        low = min_held_level(held)
+        if low is None:
+            return
+        if isinstance(node.func, ast.Attribute) and \
+                isinstance(node.func.value, ast.Name) and \
+                node.func.value.id in self.kernel_mods:
+            return  # jitted kernels take no Python locks; don't let the
+            # name merge (Collection.insert vs index.insert) poison them
+        ceiling = self.ceilings.get(name, 0)
+        if ceiling <= low:
+            return
+        if any(h.level >= ceiling for h in held):
+            # a lock at/above the ceiling is already held; the re-entrant
+            # path (e.g. insert under _admit_lock) cannot invert
+            return
+        self.findings.append(Finding(
+            self.src.relpath, node.lineno, "LO002",
+            f"calls {name}() (lock ceiling {ceiling}) while holding a "
+            f"level-{low} lock; the callee may acquire a higher lock and "
+            f"invert the hierarchy"))
+
+
+def run(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    ceilings = compute_ceilings(FunctionIndex(files))
+    for src in files:
+        kernel_mods, _ = module_aliases(src.tree, inv.DONATING_MODULE)
+        for cls, fn in iter_functions(src.tree):
+            qual = f"{cls}.{fn.name}" if cls else fn.name
+            entry = {HeldLock("self", n)
+                     for n in inv.ENTRY_LOCKS.get(qual, ())}
+            _LockOrderWalker(src, ceilings, kernel_mods,
+                             findings).run(fn, entry)
+    return findings

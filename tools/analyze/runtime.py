@@ -1,0 +1,17 @@
+"""Runtime companion of the static passes.
+
+The instrumented-lock machinery lives in ``repro.core.locking`` (src must
+not import tools); this module re-exports it so analyzer users have one
+import surface, and is what ``tests/test_analyze.py`` exercises.
+"""
+from repro.core.locking import (  # noqa: F401  (re-export surface)
+    LEVELS,
+    LockOrderValidator,
+    debug_enabled,
+    make_lock,
+    make_rlock,
+    validator,
+)
+
+__all__ = ["LEVELS", "LockOrderValidator", "debug_enabled",
+           "make_lock", "make_rlock", "validator"]

@@ -1,0 +1,180 @@
+"""Snapshot-discipline pass: SD001 (unlocked guarded write), SD002
+(unlocked guarded read), SD003 (stale republish across a lock release).
+
+The engine's concurrency model publishes immutable state snapshots behind
+per-object leaf locks: readers grab the pointer under ``_lock``, writers
+swap it under ``_lock`` while serialized by ``_writer_lock``.  That only
+holds if every write to a guarded field happens inside a lock block —
+``invariants.GUARDED_WRITE_FIELDS`` lists those fields per class, and this
+pass flags:
+
+* SD001 — a guarded field of receiver R written (assignment, augmented
+  assignment, subscript store, or in-place mutator call like
+  ``R.counters.update(...)``) with no ``R._lock``/``R._writer_lock`` held,
+* SD002 — a guarded *read* field loaded with neither lock held (scoped to
+  the pointer/container fields where a torn read is a real bug; monotonic
+  counters are deliberately not in the read set),
+* SD003 — a local captured directly from a guarded field under one lock
+  block and republished into a guarded field under a *later, separate*
+  lock block: the classic read-release-writeback lost update.  Only
+  direct republish of the captured name is flagged; values derived from
+  it are assumed re-validated (the `_swap` CAS path).
+
+Scope: methods of the classes in the registry only.  ``__init__`` is
+exempt (the object is unpublished), as is any method listed with a
+guarding lock in ``invariants.ENTRY_LOCKS`` (callers hold it).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from tools.analyze import invariants as inv
+from tools.analyze.common import (Finding, HeldLock, LockWalker,
+                                  SourceFile, iter_functions, walk_pruned)
+
+# in-place mutator method names that count as writes to their receiver
+MUTATORS = {"update", "append", "extend", "add", "remove", "discard",
+            "pop", "popitem", "clear", "setdefault", "appendleft", "insert"}
+
+
+def _guarding_held(held: Set[HeldLock], receiver: str) -> bool:
+    return any(h.name in inv.GUARDING_LOCKS and h.receiver == receiver
+               for h in held)
+
+
+class _SnapshotWalker(LockWalker):
+    def __init__(self, src: SourceFile, cls: str,
+                 findings: List[Finding]) -> None:
+        super().__init__(src)
+        self.cls = cls
+        self.wfields = inv.GUARDED_WRITE_FIELDS[cls]
+        self.rfields = inv.GUARDED_READ_FIELDS.get(cls, set())
+        self.findings = findings
+        # SD003 bookkeeping: lock epoch bumps on each lock release;
+        # snaps maps local name -> (epoch captured, source field)
+        self.epoch = 0
+        self.snaps: Dict[str, Tuple[int, str]] = {}
+
+    def on_lock_exit(self, held: Set[HeldLock]) -> None:
+        self.epoch += 1
+
+    # -- guarded-field accessors in one statement -----------------------
+    def _guarded_attr(self, node: ast.AST, fields):
+        """(receiver, field) when node is ``R.<field>`` with field
+        guarded; receiver must be a simple name (self/coll/...)."""
+        if isinstance(node, ast.Attribute) and node.attr in fields and \
+                isinstance(node.value, ast.Name):
+            return node.value.id, node.attr
+        return None
+
+    def _scan_roots(self, stmt) -> List[ast.AST]:
+        """The parts of `stmt` that execute under the *current* held set.
+        Compound statements contribute only their headers — their bodies
+        are visited separately (with the post-acquire held set for With)."""
+        if isinstance(stmt, ast.With):
+            return [i.context_expr for i in stmt.items]
+        if isinstance(stmt, (ast.If, ast.While)):
+            return [stmt.test]
+        if isinstance(stmt, ast.For):
+            return [stmt.iter]
+        if isinstance(stmt, ast.Try):
+            return []
+        return [stmt]
+
+    def on_statement(self, stmt, held: Set[HeldLock]) -> None:
+        roots = self._scan_roots(stmt)
+        self._check_writes(stmt, roots, held)
+        for root in roots:
+            self._check_reads(root, held)
+        self._track_snaps(stmt, held)
+
+    def _check_writes(self, stmt, roots, held) -> None:
+        targets: List[ast.AST] = []
+        if isinstance(stmt, (ast.Assign,)):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        for t in targets:
+            if isinstance(t, ast.Tuple):
+                elts = list(t.elts)
+            else:
+                elts = [t]
+            for elt in elts:
+                node = elt.value if isinstance(elt, ast.Subscript) else elt
+                ga = self._guarded_attr(node, self.wfields)
+                if ga and not _guarding_held(held, ga[0]):
+                    self.findings.append(Finding(
+                        self.src.relpath, elt.lineno, "SD001",
+                        f"writes {self.cls} guarded field "
+                        f"`{ga[0]}.{ga[1]}` without holding "
+                        f"{ga[0]}._lock or {ga[0]}._writer_lock"))
+        # in-place mutator calls: R.<field>.update(...)
+        for sub in (s for root in roots for s in walk_pruned(root)):
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr in MUTATORS:
+                ga = self._guarded_attr(sub.func.value, self.wfields)
+                if ga and not _guarding_held(held, ga[0]):
+                    self.findings.append(Finding(
+                        self.src.relpath, sub.lineno, "SD001",
+                        f"mutates {self.cls} guarded field "
+                        f"`{ga[0]}.{ga[1]}` via .{sub.func.attr}() "
+                        f"without holding {ga[0]}._lock or "
+                        f"{ga[0]}._writer_lock"))
+
+    def _check_reads(self, stmt, held) -> None:
+        for sub in walk_pruned(stmt):
+            if isinstance(sub, ast.Attribute) and \
+                    isinstance(sub.ctx, ast.Load):
+                ga = self._guarded_attr(sub, self.rfields)
+                if ga and not _guarding_held(held, ga[0]):
+                    self.findings.append(Finding(
+                        self.src.relpath, sub.lineno, "SD002",
+                        f"reads {self.cls} shared field "
+                        f"`{ga[0]}.{ga[1]}` without holding "
+                        f"{ga[0]}._lock or {ga[0]}._writer_lock"))
+
+    def _track_snaps(self, stmt, held) -> None:
+        # capture: local = R.<guarded read/write field>  (under a lock)
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                isinstance(stmt.targets[0], ast.Name):
+            ga = self._guarded_attr(stmt.value,
+                                    self.wfields | self.rfields)
+            if ga and _guarding_held(held, ga[0]):
+                self.snaps[stmt.targets[0].id] = (self.epoch,
+                                                  f"{ga[0]}.{ga[1]}")
+                return
+            # any other assignment to the name invalidates the snapshot
+            self.snaps.pop(stmt.targets[0].id, None)
+        # republish: R.<guarded field> = local  (later lock block)
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                ga = self._guarded_attr(t, self.wfields)
+                if ga and isinstance(stmt.value, ast.Name) and \
+                        stmt.value.id in self.snaps and \
+                        _guarding_held(held, ga[0]):
+                    cap_epoch, field = self.snaps[stmt.value.id]
+                    if self.epoch > cap_epoch:
+                        self.findings.append(Finding(
+                            self.src.relpath, stmt.lineno, "SD003",
+                            f"republishes `{stmt.value.id}` (captured "
+                            f"from {field} under an earlier lock block) "
+                            f"after the lock was released — lost-update "
+                            f"window; re-read or re-validate under this "
+                            f"lock"))
+
+
+def run(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in files:
+        for cls, fn in iter_functions(src.tree):
+            if cls not in inv.GUARDED_WRITE_FIELDS:
+                continue
+            if fn.name == "__init__":
+                continue
+            qual = f"{cls}.{fn.name}"
+            entry_names = inv.ENTRY_LOCKS.get(qual, ())
+            entry = {HeldLock("self", n) for n in entry_names}
+            _SnapshotWalker(src, cls, findings).run(fn, entry)
+    return findings
