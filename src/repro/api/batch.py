@@ -215,6 +215,13 @@ def execute_group(collections, queries: List[np.ndarray],
                  dispatches while the lanes' versions are unchanged
     Returns per-lane (ids [B_g, k], scores [B_g, k]) with padding removed.
     """
+    if path == "hnsw":
+        # graph-path lanes never reach the stacked GEMM: the service's
+        # fused submit serves them per-lane inside one task (a host-side
+        # beam search has nothing to stack) — reaching here is a routing
+        # bug, not a shape problem, so fail loudly instead of mis-scanning
+        raise ValueError("execute_group cannot stack path='hnsw' lanes; "
+                         "the service dispatches graph-path groups per-lane")
     lanes = [jnp.atleast_2d(jnp.asarray(q, jnp.float32)) for q in queries]
     sizes = [int(q.shape[0]) for q in lanes]
     bmax = max(sizes)

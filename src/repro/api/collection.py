@@ -57,6 +57,7 @@ import numpy as np
 from repro.configs.base import EngineConfig
 from repro.core import index as ivf
 from repro.core import locking
+from repro.core import metrics
 from repro.core import templates
 
 META_FILE = "collection.json"
@@ -135,6 +136,38 @@ class Collection:
         self._residency_mgr = None     # back-ref set by ResidencyManager
         self._last_used = time.monotonic()
         self._index_nbytes = ivf.state_nbytes(cfg, spill_capacity, n_shards)
+        # Recall-adaptive routing (docs/ARCHITECTURE.md): the HNSW graph is
+        # a DERIVED host-side accelerator for the "hnsw" index policy — the
+        # IVF row store above stays the single source of truth for
+        # durability, delta replay, residency, and save/load.  The graph is
+        # (re)built lazily from the live rows (`_ensure_graph`),
+        # incrementally mirrored by writers under the writer lock
+        # (`_graph_apply`), and invalidated whenever a bulk operation
+        # republishes the store wholesale (build / rebuild / demote).
+        # `_graph_lock` is a leaf: only ever wraps pure graph work, never
+        # nests another lock inside it.
+        self._graph = None
+        self._graph_lock = locking.make_lock("_lock")
+        self._approx_live = 0          # host-side live-row estimate (routing)
+        self._probe_ops = 0            # ops since the last recall probe
+        self._probe_seq = 0            # deterministic probe RNG stream
+        self._last_probe: Optional[dict] = None
+        # target_recall > 0 arms the probe + per-path knob tuners; the
+        # sharded tier serves exact per-shard scans + hierarchical merge
+        # (no effort knob), so its probes measure without retuning
+        if cfg.target_recall > 0 and not self.sharded:
+            from repro.core.tuner import RecallTuner
+            self._nprobe_tuner = RecallTuner(
+                cfg.target_recall,
+                max(1, min(cfg.nprobe, cfg.n_clusters)), 1, cfg.n_clusters)
+            ef_lo = max(1, cfg.k)
+            ef_hi = max(1024, 8 * max(cfg.hnsw_ef, cfg.k))
+            self._ef_tuner = RecallTuner(
+                cfg.target_recall,
+                min(max(cfg.hnsw_ef, ef_lo), ef_hi), ef_lo, ef_hi)
+        else:
+            self._nprobe_tuner = None
+            self._ef_tuner = None
         if not _alloc_state:
             # device-free init for load_from: the loader installs the
             # restored state (hot) or host/cold residency itself
@@ -278,6 +311,9 @@ class Collection:
                 self._epoch += 1    # obsoletes in-flight rebuild snapshots
                 for s in range(self._n_shards):
                     self._shard_versions[s] += 1
+            # the derived graph only serves the HOT tier; free it with the
+            # device state (promote + next graph query rebuild it)
+            self._graph_invalidate()
         out = {"tier": tier, "demoted": True,
                "demote_s": time.perf_counter() - t0}
         mgr = self._residency_mgr
@@ -448,6 +484,7 @@ class Collection:
                 self._shard_versions[s] += 1
             for key, d in counter_deltas.items():
                 self.counters[key] += d
+                self._probe_ops += d    # recall-probe cadence counter
             return self._version
 
     # ------------------------------------------------------------------
@@ -472,6 +509,7 @@ class Collection:
             self._last_used = time.monotonic()
             for key, d in deltas.items():
                 self.counters[key] += d
+                self._probe_ops += d    # recall-probe cadence counter
 
     def _log_delta(self, kind: str, rows, ids) -> None:
         """Record a write for every shard with an in-flight rebuild.  Caller
@@ -572,7 +610,11 @@ class Collection:
                 self._shard_pressure = [{"tombstones": 0, "spilled": sp}
                                         for sp in per_shard]
                 self._spill_floors = list(per_shard)
+                self._approx_live = int(x.shape[0])
+                # a fresh index deserves a prompt recall measurement
+                self._probe_ops = self.thresholds.probe_interval_ops
             self._swap(state, rebuilds=1, spilled=spilled)
+            self._graph_invalidate()   # derived graph lazily rebuilds
         return {"build_s": time.perf_counter() - t0, "spilled": spilled}
 
     def insert(self, vectors, ids=None) -> int:
@@ -606,8 +648,12 @@ class Collection:
             with self._lock:
                 for s, sp in enumerate(per_shard):
                     self._shard_pressure[s]["spilled"] += sp
+                self._approx_live += int(x.shape[0])
             self._swap(state, inserts=int(x.shape[0]), spilled=spilled)
             self._log_delta("insert", x, ids)
+            # mirror into the derived HNSW graph (no-op until one exists);
+            # still under the writer lock, so graph order == state order
+            self._graph_apply("insert", np.asarray(x), np.asarray(ids))
         return spilled
 
     def delete(self, ids) -> int:
@@ -633,8 +679,12 @@ class Collection:
             with self._lock:
                 for s, n in enumerate(per_shard):
                     self._shard_pressure[s]["tombstones"] += n
+                self._approx_live = max(0, self._approx_live - n_hit)
             self._swap(state, deletes=n_hit)
             self._log_delta("delete", None, ids)
+            # graph delete is idempotent per id — absent ids are a no-op,
+            # matching the state's "ids not present contribute nothing"
+            self._graph_apply("delete", None, np.asarray(ids))
         return n_hit
 
     def query(self, queries, k: Optional[int] = None,
@@ -658,6 +708,10 @@ class Collection:
         if self.sharded:
             from repro.core import distributed as dce
             ids, scores = dce.dist_query(state, q, self.cfg, self.mesh, k)
+        elif path == "hnsw":
+            # derived-graph path: host-side serial beam search at the
+            # tuner-owned ef (the paper's pointer-chasing baseline, live)
+            return self._query_graph(np.asarray(q), k)
         elif path == "full_scan":
             ids, scores = ivf.query_full_scan(state, q, self.cfg, k)
         else:
@@ -776,6 +830,11 @@ class Collection:
                         self._spill_floors[0] = spilled
                     spilled += extra
                     self._swap(new, rebuilds=1)
+                    # the rebuilt store may have repacked/dropped slots the
+                    # incrementally-mirrored graph still reflects — drop the
+                    # derived graph; the next graph query rebuilds it from
+                    # the post-replay live rows
+                    self._graph_invalidate()
                     return {"rebuild_s": time.perf_counter() - t0,
                             "spilled": spilled, "replayed": replayed,
                             "restarts": restarts, "aborted": False}
@@ -970,6 +1029,209 @@ class Collection:
         return dce.assemble_host(shards), m, dst
 
     # ------------------------------------------------------------------
+    # Index policy + derived HNSW graph tier (recall-adaptive routing)
+    # ------------------------------------------------------------------
+    def index_policy(self) -> str:
+        """Resolved index policy for the collection's CURRENT size.
+
+        "auto" follows the host-side live-row estimate across the template
+        thresholds: <= `flat_max_rows` -> "flat" (exact full-scan GEMM),
+        >= `hnsw_min_rows` -> "hnsw" (derived graph), else "ivf".  Sharded
+        collections always resolve to "ivf" — the mesh tier serves exact
+        per-shard scans with a hierarchical merge.
+        """
+        pol = self.cfg.index_policy
+        if pol != "auto":
+            return pol
+        if self.sharded:
+            return "ivf"
+        with self._lock:
+            n = self._approx_live
+        if n <= self.thresholds.flat_max_rows:
+            return "flat"
+        if n >= self.thresholds.hnsw_min_rows:
+            return "hnsw"
+        return "ivf"
+
+    def tuned_nprobe(self) -> int:
+        """The tuner-owned nprobe (cfg default until a tuner exists)."""
+        t = self._nprobe_tuner
+        return self.cfg.nprobe if t is None else t.knob
+
+    def tuned_ef(self, k: Optional[int] = None) -> int:
+        """The tuner-owned HNSW beam width, floored at k."""
+        t = self._ef_tuner
+        ef = self.cfg.hnsw_ef if t is None else t.knob
+        return max(ef, k or self.cfg.k)
+
+    def _graph_invalidate(self) -> None:
+        with self._graph_lock:
+            self._graph = None
+
+    def _graph_apply(self, kind: str, rows, ids) -> None:
+        """Incrementally mirror one write into the derived graph.  Caller
+        holds the writer lock, so graph mutation order == state order; a
+        no-op until a graph exists (it then rebuilds lazily including this
+        write).  `ids` host-convertible; `rows` f32[N, D] for inserts."""
+        with self._graph_lock:
+            g = self._graph
+            if g is None:
+                return
+            if kind == "insert":
+                for r, i in zip(rows, ids):
+                    g.add(r, int(i))
+            else:
+                for i in np.atleast_1d(ids):
+                    g.delete(int(i))
+
+    def _build_graph_from(self, state):
+        """Fresh HNSW graph over the live rows of `state` (host-side)."""
+        from repro.core.hnsw import HNSW
+        rows, ids = ivf.flat_rows_host(state)
+        live = np.nonzero(ids >= 0)[0]
+        g = HNSW(self.cfg.dim, m=self.cfg.hnsw_m,
+                 ef_construction=max(self.cfg.hnsw_ef, 2 * self.cfg.hnsw_m),
+                 metric=self.cfg.metric)
+        g.build(rows[live], ids[live])
+        return g
+
+    def _ensure_graph(self):
+        """The derived graph, (re)building it from the live rows if absent.
+
+        The build runs under the writer lock (serialized against mutators,
+        so no mirror update can be lost between the snapshot read and the
+        install) — the O(N log N) cost lands on the first graph query after
+        an invalidation, which is exactly the paper's HNSW build story.
+        Queries against an existing graph never touch the writer lock.
+        """
+        with self._graph_lock:
+            g = self._graph
+        if g is not None:
+            return g
+        with self._hot_writer():
+            with self._graph_lock:
+                g = self._graph
+            if g is None:
+                g = self._build_graph_from(self._state)
+                with self._graph_lock:
+                    self._graph = g
+            return g
+
+    def _query_graph(self, q: np.ndarray, k: int,
+                     ef: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Serve a query batch from the HNSW graph (path "hnsw").
+
+        Returns (ids i64[B, k], scores f32[B, k]) in the engine's score
+        convention (larger = better; "ip" scores are raw inner products,
+        "l2" scores are negated distances so rankings match the IVF paths).
+        Searches serialize on the graph lock — the single-threaded
+        pointer-chasing baseline the paper measures against.
+        """
+        g = self._ensure_graph()
+        ef = ef or self.tuned_ef(k)
+        with self._graph_lock:
+            ids, ds = g.search_batch_scored(q, k, ef=ef)
+        scores = np.where(np.isfinite(ds), -ds, -np.inf).astype(np.float32)
+        return ids, scores
+
+    # ------------------------------------------------------------------
+    # Recall probe (background MemoryOp kind "probe")
+    # ------------------------------------------------------------------
+    def recall_probe_due(self) -> bool:
+        """True when the recall tuner wants a fresh measurement: probing
+        armed (`cfg.target_recall > 0`), built, HOT, and at least
+        `thresholds.probe_interval_ops` ops since the last probe."""
+        if self.cfg.target_recall <= 0:
+            return False
+        with self._lock:
+            return (self._built and self._residency_tier == "hot"
+                    and self._probe_ops >= self.thresholds.probe_interval_ops)
+
+    def recall_probe(self, sample: Optional[int] = None,
+                     k: Optional[int] = None) -> dict:
+        """One recall measurement + tuner step (the "probe" op kind).
+
+        Snapshots the state, samples live rows as queries, runs them down
+        the collection's LIVE serving path, scores against the exact
+        brute-force oracle on the same snapshot, and feeds recall@k to the
+        path's knob tuner (`nprobe` on the probed path, `ef` on the graph
+        path; the flat and sharded paths are exact — measured, never
+        retuned).  Read-only w.r.t. the row store: no writer lock, no state
+        swap — retuning has zero query downtime (in-flight queries keep the
+        knob they resolved; later ones pick up the new value atomically).
+        """
+        k = k or self.cfg.k
+        sample = sample or self.thresholds.probe_sample
+        with self._lock:
+            if not self._built or self._residency_tier != "hot":
+                return {"skipped": self._residency_tier, "recall": None}
+            state = self._state
+            self._probe_ops = 0
+            seq = self._probe_seq
+            self._probe_seq += 1
+        # flat host view of the snapshot = the oracle's ground truth
+        if self.sharded:
+            from repro.core import distributed as dce
+            parts = [ivf.flat_rows_host(s)
+                     for s in dce.split_host(state, self._n_shards)]
+            rows = np.concatenate([p[0] for p in parts])
+            ids = np.concatenate([p[1] for p in parts])
+        else:
+            rows, ids = ivf.flat_rows_host(state)
+        live = np.nonzero(ids >= 0)[0]
+        # Probe the path the policy serves steady traffic with — NOT the
+        # batch router's choice for the probe's own batch size: a
+        # probe_sample-row batch would route to the exact full scan and the
+        # nprobe tuner would never observe the probed path it owns.
+        if self.sharded:
+            path, nprobe = "sharded", 0
+        else:
+            pol = self.index_policy()
+            if pol == "flat":
+                path, nprobe = "full_scan", 0
+            elif pol == "hnsw":
+                path, nprobe = "hnsw", 0
+            else:
+                path = "probed"
+                nprobe = max(1, min(self.tuned_nprobe(),
+                                    self.cfg.n_clusters))
+        out = {"path": path, "k": k, "sample": 0, "recall": 1.0,
+               "knob": None, "retuned": False, "seq": seq}
+        if len(live) == 0:            # nothing to measure — vacuously met
+            with self._lock:
+                self._last_probe = out
+            return out
+        import zlib
+        rng = np.random.default_rng(
+            (zlib.crc32(self.name.encode()) + seq) & 0x7FFFFFFF)
+        sel = rng.choice(live, size=min(sample, len(live)), replace=False)
+        qs = rows[sel]
+        true = metrics.brute_force_topk(qs, rows, ids, k, self.cfg.metric)
+        tuner = None
+        if self.sharded:
+            from repro.core import distributed as dce
+            got, _ = dce.dist_query(state, jnp.asarray(qs), self.cfg,
+                                    self.mesh, k)
+        elif path == "full_scan":
+            got, _ = ivf.query_full_scan(state, jnp.asarray(qs), self.cfg, k)
+        elif path == "hnsw":
+            tuner = self._ef_tuner
+            got, _ = self._query_graph(qs, k)
+        else:
+            tuner = self._nprobe_tuner
+            got, _ = ivf.query_probed(state, jnp.asarray(qs), self.cfg, k,
+                                      nprobe)
+        rec = metrics.recall_at_k(np.asarray(got), np.asarray(true))
+        out.update(recall=rec, sample=int(len(sel)))
+        if tuner is not None:
+            before = tuner.knob
+            after = tuner.observe(rec)
+            out.update(knob=after, retuned=after != before)
+        with self._lock:
+            self._last_probe = out
+        return out
+
+    # ------------------------------------------------------------------
     # Maintenance pressure (consumed by the service's MaintenanceController)
     # ------------------------------------------------------------------
     def maintenance_pressure(self) -> dict:
@@ -1032,13 +1294,37 @@ class Collection:
         The resolved triple is part of the batch signature, so sync,
         future, and cross-collection-batched execution of the same request
         all take the identical execution path.
+
+        nprobe is tuner-owned: a caller passing None gets the recall
+        tuner's current knob (cfg default until a tuner exists), clamped
+        EXACTLY like the kernel clamps it (`ivf.query_probed`: max(1,
+        min(nprobe, n_clusters))) — the resolved value IS the executed
+        value, so the signature can never disagree with the dispatch, and
+        two tenants tuned to different nprobe split fusion groups cleanly.
+        Off the probe path nprobe is not an execution parameter at all and
+        is pinned to 0, so tuner divergence never splits full-scan or
+        graph-path groups.
+
+        The execution path follows the resolved index policy: "flat"
+        always full-scans, "hnsw" serves from the derived graph, "ivf"
+        (and sharded tenants) keep the profiling-guided template route.
         """
         k = k or self.cfg.k
-        # clamp here too so equivalent over-asks share one batch signature
-        nprobe = min(nprobe or self.cfg.nprobe, self.cfg.n_clusters)
+        if not nprobe:
+            nprobe = self.tuned_nprobe()
+        # identical clamp to ivf.query_probed — signature == execution
+        nprobe = max(1, min(int(nprobe), self.cfg.n_clusters))
         if path is None:
-            path = templates.route("query", batch, self.cfg,
-                                   self.thresholds).path
+            policy = self.index_policy()
+            if policy == "flat":
+                path = "full_scan"
+            elif policy == "hnsw" and not self.sharded:
+                path = "hnsw"
+            else:
+                path = templates.route("query", batch, self.cfg,
+                                       self.thresholds).path
+        if path != "probed":
+            nprobe = 0        # unused off the probe path; keep groups whole
         return k, nprobe, path
 
     def batch_signature(self, batch: int, k, nprobe, path):
@@ -1114,6 +1400,13 @@ class Collection:
         s["pressure"] = {"tombstones": sum(p["tombstones"] for p in pressure),
                          "spilled": sum(p["spilled"] for p in pressure),
                          "shards": pressure}
+        s["index_policy"] = self.index_policy()
+        if self._nprobe_tuner is not None:
+            s["tuner"] = {"nprobe": self._nprobe_tuner.stats(),
+                          "ef": self._ef_tuner.stats()}
+        with self._lock:
+            s["last_probe"] = (None if self._last_probe is None
+                               else dict(self._last_probe))
         return s
 
     # ------------------------------------------------------------------
@@ -1145,7 +1438,14 @@ class Collection:
                         "spill_floors": list(self._spill_floors),
                         "store_dtype": self.cfg.store_dtype,
                         "residency": tier,
-                        "pressure": [dict(p) for p in self._shard_pressure]}
+                        "pressure": [dict(p) for p in self._shard_pressure],
+                        "approx_live": self._approx_live,
+                        "probe_seq": self._probe_seq}
+            # tuner state round-trips so a restored collection keeps its
+            # learned effort knobs instead of re-seeking from the defaults
+            if self._nprobe_tuner is not None:
+                meta["tuners"] = {"nprobe": self._nprobe_tuner.to_dict(),
+                                  "ef": self._ef_tuner.to_dict()}
             if self.sharded:
                 meta["sharded"] = True
                 meta["mesh_axes"] = list(self.mesh.axis_names)
@@ -1266,6 +1566,18 @@ class Collection:
             coll._built = bool(meta.get("built", True))
             coll._next_id = int(meta.get("next_id", 0))
             coll.counters.update(meta.get("counters", {}))
+            coll._approx_live = int(meta.get("approx_live", 0))
+            coll._probe_seq = int(meta.get("probe_seq", 0))
+        # restore learned tuner knobs under the CALLER's target_recall (the
+        # cfg wins over the snapshot's target, but the knob/floor survive)
+        tuners = meta.get("tuners")
+        if tuners is not None and coll._nprobe_tuner is not None:
+            from repro.core.tuner import RecallTuner
+            for attr, key in (("_nprobe_tuner", "nprobe"),
+                              ("_ef_tuner", "ef")):
+                d = dict(tuners[key])
+                d["target"] = cfg.target_recall
+                setattr(coll, attr, RecallTuner.from_dict(d))
         # re-seed maintenance pressure so a reload doesn't silently forget
         # accumulated tombstones/spill: newer snapshots persist the host
         # counters (a demoted collection has no device scalars to read);

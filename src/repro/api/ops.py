@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 from typing import Any, Optional
 
 OP_KINDS = ("build", "insert", "delete", "query", "rebuild",
-            "promote", "demote")
+            "promote", "demote", "probe")
 
 
 @dataclass
@@ -25,7 +25,9 @@ class MemoryOp:
     """One memory operation against one named collection.
 
     payload: vectors for build/insert, queries for query, ids for delete,
-             None for rebuild/promote/demote.
+             None for rebuild/promote/demote/probe (a probe is one sampled
+             exact-oracle recall measurement + tuner step; see
+             `Collection.recall_probe`).
     ids:     explicit external ids for build/insert (else auto-assigned).
     k / nprobe / path: query parameters (None = collection defaults; `path`
              overrides the template router, as in the benchmarks).

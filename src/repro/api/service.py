@@ -86,6 +86,7 @@ class MaintenanceController:
         self._backoff_until: Dict[Tuple[str, object], float] = {}
         self.triggered = 0
         self.demotions_triggered = 0
+        self.probes_triggered = 0
         self.failed = 0
         self.last_error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._run,
@@ -141,8 +142,9 @@ class MaintenanceController:
 
     def poll_once(self) -> int:
         """One maintenance sweep; returns the number of ops scheduled
-        (shard-local rebuilds from tombstone/spill pressure, plus
-        background residency demotions of idle or over-budget tenants).
+        (shard-local rebuilds from tombstone/spill pressure, recall probes
+        for collections whose tuner cadence is due, plus background
+        residency demotions of idle or over-budget tenants).
         Also callable directly — tests and cron-style drivers; safe to
         race with the daemon poll (see `_try_submit`)."""
         n = 0
@@ -157,6 +159,13 @@ class MaintenanceController:
                                                   shard=key[1])):
                     with self._lock:
                         self.triggered += 1
+                    n += 1
+            # recall probe: the tuner's measurement cadence rides the same
+            # slot protocol — at most one in-flight probe per collection
+            if coll.recall_probe_due():
+                if self._try_submit((name, "probe"), MemoryOp("probe", name)):
+                    with self._lock:
+                        self.probes_triggered += 1
                     n += 1
         # residency sweep: the manager names (collection, target-tier)
         # pairs that should drain off the device tier in the background —
@@ -189,6 +198,7 @@ class MaintenanceController:
         with self._lock:
             return {"triggered": self.triggered, "failed": self.failed,
                     "demotions_triggered": self.demotions_triggered,
+                    "probes_triggered": self.probes_triggered,
                     "inflight": sorted(
                         self._slot_name(k) for k, f in self._inflight.items()
                         if f is None or not f.done()),
@@ -371,6 +381,10 @@ class MemoryService:
             return coll.residency
         if op.kind == "demote":
             return self._residency.demote(coll, tier=op.tier or "warm")
+        if op.kind == "probe":
+            # background recall measurement + tuner step; read-only w.r.t.
+            # the row store, so it never contends with serving traffic
+            return coll.recall_probe()
         raise ValueError(f"unknown op kind {op.kind!r}")
 
     # ------------------------------------------------------------------
@@ -523,6 +537,16 @@ class MemoryService:
                 colls = [lanes[nm]["coll"] for nm in order]
                 qs = [np.concatenate(lanes[nm]["qs"]) for nm in order]
                 results = None
+                if path == "hnsw":
+                    # graph-path lanes share the group (same signature) and
+                    # the single scheduler dispatch, but a host-side beam
+                    # search has no GEMM to stack — the task serves the
+                    # lanes in sequence, each from its own derived graph
+                    results = [c.query(q, k=k, path=path)
+                               for c, q in zip(colls, qs)]
+                    fuse.demux([lanes[nm]["entries"] for nm in order],
+                               results)
+                    return len(results)
                 # a lane can demote between flush and dispatch (background
                 # idle demotion / eviction races the scheduler queue):
                 # re-promote and retry the stacked dispatch a few times,

@@ -232,7 +232,29 @@ class EngineConfig:
     # distributed
     shard_db: bool = False           # shard lists over the mesh data axes
 
+    # index policy & recall-adaptive routing
+    index_policy: str = "ivf"        # ivf | flat | hnsw | auto (size-based)
+    target_recall: float = 0.0       # > 0 enables the recall probe + tuner
+    hnsw_m: int = 16                 # HNSW graph degree (policy "hnsw"/"auto")
+    hnsw_ef: int = 96                # HNSW search beam width (tuner-owned)
+
     def __post_init__(self):
+        if self.index_policy not in ("ivf", "flat", "hnsw", "auto"):
+            raise ValueError(
+                f"EngineConfig.index_policy {self.index_policy!r} is not "
+                "supported; use 'ivf', 'flat', 'hnsw', or 'auto'")
+        if self.shard_db and self.index_policy in ("hnsw", "flat"):
+            raise ValueError(
+                "EngineConfig.shard_db serves queries via the per-shard "
+                "fused scan + hierarchical merge; index_policy must be "
+                f"'ivf' or 'auto' (got {self.index_policy!r})")
+        if not 0.0 <= self.target_recall <= 1.0:
+            raise ValueError("EngineConfig.target_recall must be in [0, 1] "
+                             f"(got {self.target_recall})")
+        if self.hnsw_m < 2:
+            raise ValueError(f"EngineConfig.hnsw_m must be >= 2 (got {self.hnsw_m})")
+        if self.hnsw_ef < 1:
+            raise ValueError(f"EngineConfig.hnsw_ef must be >= 1 (got {self.hnsw_ef})")
         if self.store_dtype not in ("float32", "int8"):
             raise ValueError(
                 f"EngineConfig.store_dtype {self.store_dtype!r} is not "

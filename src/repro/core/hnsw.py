@@ -10,6 +10,17 @@ exhibits exactly the properties the paper calls out as SoC/accelerator-
 hostile: pointer-chasing adjacency, irregular memory access, per-element
 scalar distance work, and O(N) incremental build with no batched GEMM shape
 anywhere.
+
+Since PR 9 it is also a *live* index tier: `repro.api.Collection` with
+`index_policy` "hnsw" (or "auto", above the size threshold) serves queries
+from this graph.  The graph is strictly a derived structure — the IVF row
+store (`core/index.IVFState`) remains the single source of truth for
+durability, delta replay, residency, and save/load — so the lifecycle
+semantics here are exact: `add` of an existing external id supersedes the
+old node, `delete` tombstones the node (`dead`), and `live_ids()` always
+equals the set of externally-visible ids.  Mutation and search are guarded
+by the owning Collection's graph lock; within this class everything stays
+single-threaded numpy on purpose (it is the paper's serial baseline).
 """
 from __future__ import annotations
 
@@ -35,8 +46,9 @@ class HNSW:
         self.graph: List[Dict[int, np.ndarray]] = []
         self.entry: Optional[int] = None
         self.max_level = -1
-        self.ids: List[int] = []          # external ids
-        self.deleted: set = set()
+        self.ids: List[int] = []          # external ids (per internal node)
+        self.id2node: Dict[int, int] = {}  # ext id -> its CURRENT node
+        self.dead: set = set()             # internal nodes no longer visible
 
     # ------------------------------------------------------------------
     def _dist(self, q: np.ndarray, idx) -> np.ndarray:
@@ -127,8 +139,13 @@ class HNSW:
     def add(self, x: np.ndarray, ext_id: Optional[int] = None) -> int:
         x = np.asarray(x, np.float32)
         node = len(self.levels)
+        ext = int(ext_id) if ext_id is not None else node
+        old = self.id2node.get(ext)
+        if old is not None:               # re-insert supersedes the old row
+            self.dead.add(old)
+        self.id2node[ext] = node
         self.vecs = np.concatenate([self.vecs, x[None]], 0)
-        self.ids.append(ext_id if ext_id is not None else node)
+        self.ids.append(ext)
         lvl = self._sample_level()
         self.levels.append(lvl)
         while len(self.graph) <= lvl:
@@ -157,20 +174,40 @@ class HNSW:
             self.add(x, None if ids is None else int(ids[i]))
 
     def delete(self, ext_id: int):
-        self.deleted.add(ext_id)
+        """Tombstone an external id; absent ids are a no-op (idempotent)."""
+        node = self.id2node.pop(int(ext_id), None)
+        if node is not None:
+            self.dead.add(node)
+
+    def __len__(self) -> int:
+        """Number of live (externally visible) ids."""
+        return len(self.id2node)
+
+    def live_ids(self) -> np.ndarray:
+        """Sorted external ids currently visible to search."""
+        return np.asarray(sorted(self.id2node), np.int64)
 
     # ------------------------------------------------------------------
     def search(self, q: np.ndarray, k: int, ef: int = 50
                ) -> Tuple[np.ndarray, np.ndarray]:
         q = np.asarray(q, np.float32)
-        if self.entry is None:
+        if self.entry is None or not self.id2node:
             return np.full(k, -1, np.int64), np.full(k, np.inf, np.float32)
         ep = self.entry
         for l in range(self.max_level, 0, -1):
             ep = self._search_layer(q, ep, 1, l)[0][1]
-        res = self._search_layer(q, ep, max(ef, k), 0)
-        out = [(d, n) for d, n in res if self.ids[n] not in self.deleted]
-        out = out[:k]
+        # dead nodes still route (their edges hold the graph together until
+        # the next rebuild purges them) but never surface in results; under
+        # heavy churn the beam may be mostly dead, so widen it until k live
+        # results emerge or the beam saturates
+        ef_eff = max(ef, k)
+        want = min(k, len(self.id2node))
+        while True:
+            res = self._search_layer(q, ep, ef_eff, 0)
+            out = [(d, n) for d, n in res if n not in self.dead][:k]
+            if len(out) >= want or len(res) < ef_eff or ef_eff >= 8 * max(ef, k):
+                break
+            ef_eff *= 2
         ids = np.asarray([self.ids[n] for _, n in out], np.int64)
         ds = np.asarray([d for d, _ in out], np.float32)
         if len(ids) < k:
@@ -181,3 +218,10 @@ class HNSW:
     def search_batch(self, qs: np.ndarray, k: int, ef: int = 50):
         ids = np.stack([self.search(q, k, ef)[0] for q in qs])
         return ids
+
+    def search_batch_scored(self, qs: np.ndarray, k: int, ef: int = 50
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Like `search_batch` but also returns the stacked distances."""
+        outs = [self.search(q, k, ef) for q in qs]
+        return (np.stack([o[0] for o in outs]),
+                np.stack([o[1] for o in outs]))

@@ -496,6 +496,17 @@ def _flat_rows(state: IVFState) -> Tuple[jax.Array, jax.Array]:
     return rows, ids
 
 
+def flat_rows_host(state: IVFState) -> Tuple[np.ndarray, np.ndarray]:
+    """Host (rows f32[N, D], ids[N]) view of every slot — list tier then
+    spill.  ids < 0 mark empty/tombstoned slots; callers mask.  Always the
+    exact f32 rows, even under the int8 policy (they stay the source of
+    truth) — this is the flat view the recall probe's brute-force oracle
+    and the derived HNSW graph build read from."""
+    rows, ids = _flat_rows(state)
+    return (np.asarray(jax.device_get(rows)),
+            np.asarray(jax.device_get(ids)))
+
+
 def _metric_norms(rows: jax.Array, metric: str) -> Optional[jax.Array]:
     if metric == "l2":
         return jnp.sum(rows.astype(jnp.float32) ** 2, axis=1)

@@ -7,24 +7,51 @@ import numpy as np
 
 
 def brute_force_topk(queries, rows, ids, k: int, metric: str = "ip"):
-    """Exact fp32 ground truth (the paper's Flat baseline)."""
+    """Exact fp32 ground truth (the paper's Flat baseline).
+
+    Tombstoned / empty slots (ids < 0) are masked out.  When k exceeds the
+    number of rows the result is right-padded with -1, so the oracle stays
+    total on tiny or heavily-deleted collections.
+    """
     q = jnp.asarray(queries, jnp.float32)
     r = jnp.asarray(rows, jnp.float32)
+    ids = jnp.asarray(ids)
+    n = int(r.shape[0])
+    if n == 0:
+        return np.full((int(q.shape[0]), k), -1, dtype=np.int64)
     scores = q @ r.T
     if metric == "l2":
         scores = -(jnp.sum(r * r, axis=1)[None, :] - 2.0 * scores)
-    valid = jnp.asarray(ids) >= 0
+    valid = ids >= 0
     scores = jnp.where(valid[None, :], scores, -jnp.inf)
-    _, idx = jax.lax.top_k(scores, k)
-    return np.asarray(jnp.asarray(ids)[idx])
+    kk = min(k, n)
+    top, idx = jax.lax.top_k(scores, kk)
+    got = jnp.where(jnp.isfinite(top), ids[idx], -1)
+    out = np.asarray(got)
+    if kk < k:
+        out = np.concatenate(
+            [out, np.full((out.shape[0], k - kk), -1, dtype=out.dtype)], axis=1)
+    return out
 
 
 def recall_at_k(got_ids: np.ndarray, true_ids: np.ndarray) -> float:
-    """Fraction of ground-truth neighbors returned (Recall@K)."""
+    """Fraction of ground-truth neighbors returned (Recall@K).
+
+    Padding / tombstone slots (ids < 0) never count: they are dropped from
+    both sides, and each row's denominator is its count of *distinct* valid
+    ground-truth ids — so `k > live rows`, duplicate ids, and all-tombstoned
+    lists are all well-defined.  A query set with no valid ground truth at
+    all (empty collection) vacuously has recall 1.0.
+    """
     got_ids = np.asarray(got_ids)
     true_ids = np.asarray(true_ids)
-    assert got_ids.shape == true_ids.shape
+    assert got_ids.ndim == true_ids.ndim == 2
+    assert got_ids.shape[0] == true_ids.shape[0]
     hits = 0
+    denom = 0
     for g, t in zip(got_ids, true_ids):
-        hits += len(set(g.tolist()) & set(t.tolist()))
-    return hits / true_ids.size
+        tset = {int(i) for i in t.tolist() if i >= 0}
+        gset = {int(i) for i in g.tolist() if i >= 0}
+        hits += len(gset & tset)
+        denom += len(tset)
+    return 1.0 if denom == 0 else hits / denom

@@ -65,6 +65,18 @@ class TemplateThresholds:
     maintenance_spill_frac: float = 0.5
     maintenance_min_pending: int = 64
     maintenance_shard_min_pending: Optional[int] = None
+    # Size-based index policy (EngineConfig.index_policy == "auto"): a
+    # collection at or below `flat_max_rows` live rows answers queries with
+    # the exact full-scan GEMM (probing a tiny index costs more than
+    # scanning it), one at or above `hnsw_min_rows` serves from the derived
+    # HNSW graph, and everything between runs the IVF probe path.
+    flat_max_rows: int = 2048
+    hnsw_min_rows: int = 100_000
+    # Recall probe cadence (EngineConfig.target_recall > 0): one sampled
+    # exact-oracle recall measurement per `probe_interval_ops` ops, over
+    # `probe_sample` live rows drawn from the current snapshot.
+    probe_interval_ops: int = 512
+    probe_sample: int = 64
 
     @classmethod
     def from_profile(cls, cfg: EngineConfig,
@@ -98,7 +110,7 @@ def route(kind: str, batch: int, cfg: EngineConfig,
     """Map (workload kind, batch) -> execution plan.
 
     kind: "build" | "query" | "insert" | "delete" | "rebuild" |
-          "promote" | "demote"
+          "promote" | "demote" | "probe"
 
     fused_lanes: number of distinct collection lanes a cross-collection
     batched dispatch stacks (1 = a plain single-collection op).  A fused
@@ -147,4 +159,8 @@ def route(kind: str, batch: int, cfg: EngineConfig,
     if kind == "demote":
         # eviction/idle demotion: device->host/disk drain, pure background
         return ExecPlan("residency", "demote", "background", 2, 1, sd)
+    if kind == "probe":
+        # recall probe: sampled exact-oracle rescan + tuner step — read-only
+        # measurement work that must never preempt serving traffic
+        return ExecPlan("probe", "probe", "background", 2, 1, sd)
     raise ValueError(f"unknown workload kind {kind!r}")

@@ -1,0 +1,569 @@
+"""Recall-adaptive routing: probes, tuners, index policy, graph tier.
+
+Tentpole coverage for the adaptive serving loop:
+
+* `RecallTuner` state machine (seek doubles the knob and raises the floor,
+  hold band, backoff never returns below a knob known insufficient) and its
+  persistence round-trip;
+* `metrics.recall_at_k` / `brute_force_topk` edge cases (k > live rows,
+  duplicate ids, all-tombstoned, empty) — the oracle must be trustworthy
+  before anything tunes against it;
+* size-based index policy (flat / ivf / hnsw / auto) and its config
+  validation;
+* the recall-probe lifecycle: cadence, determinism, skip-when-demoted,
+  zero query downtime while retuning;
+* the acceptance scenario: a drifting workload drops probed recall below
+  `target_recall`, the probe detects it, and the tuner walks nprobe back up
+  until the exact oracle confirms recall is restored;
+* tuner-owned nprobe vs batch fusion: tenants tuned to different nprobe
+  must split fusion groups cleanly (signature == execution), and graph-path
+  lanes must never reach the stacked GEMM;
+* the derived HNSW graph tier: IVF concurrency guarantees (zero lost rows
+  under concurrent insert + delete + rebuild) and save/load round-trip.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import live_ids as _live_ids
+
+from repro.api import Collection, MemoryService
+from repro.api.batch import execute_group
+from repro.configs.base import EngineConfig
+from repro.core import metrics
+from repro.core.tuner import RecallTuner
+
+pytestmark = pytest.mark.tier1
+
+D = 128
+
+
+def _cfg(**kw):
+    base = dict(dim=D, n_clusters=128, list_capacity=64, nprobe=4, k=10,
+                use_kernel=False, kmeans_iters=3)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _corpus(n, seed=0, shift=0.0):
+    """Plain gaussian rows: neighbor gaps well above bf16 scan rounding."""
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, D)) + shift).astype(np.float32)
+
+
+def _oracle_recall(coll, k=10, sample=64, seed=3):
+    """Serving recall of `coll`'s live path vs the exact oracle."""
+    from repro.core import index as ivf
+    state = coll.snapshot()
+    rows, ids = ivf.flat_rows_host(state)
+    live = np.nonzero(ids >= 0)[0]
+    rng = np.random.default_rng(seed)
+    qs = rows[rng.choice(live, size=min(sample, len(live)), replace=False)]
+    true = metrics.brute_force_topk(qs, rows, ids, k, coll.cfg.metric)
+    got, _ = coll.query(qs, k=k)
+    return metrics.recall_at_k(np.asarray(got), np.asarray(true))
+
+
+# ---------------------------------------------------------------------------
+# RecallTuner state machine
+# ---------------------------------------------------------------------------
+
+class TestRecallTuner:
+    def test_seek_doubles_and_raises_floor(self):
+        t = RecallTuner(0.9, knob=2, lo=1, hi=128)
+        assert t.observe(0.5) == 4          # below target: double
+        assert t.observe(0.5) == 8
+        assert t.observe(0.5) == 16
+        s = t.stats()
+        assert s["floor"] == 8              # last knob known insufficient
+        assert s["raises"] == 3
+
+    def test_backoff_never_below_failed_knob(self):
+        t = RecallTuner(0.9, knob=2, lo=1, hi=128)
+        t.observe(0.5)                      # 2 failed -> floor 2, knob 4
+        t.observe(0.5)                      # 4 failed -> floor 4, knob 8
+        # plenty of recall headroom: backs off, but never to <= floor
+        for _ in range(10):
+            k = t.observe(1.0)
+            assert k > t.stats()["floor"]
+        assert t.knob == 5                  # floor + 1 is the hard deck
+
+    def test_hold_band(self):
+        t = RecallTuner(0.9, knob=16, lo=1, hi=128, slack=0.05)
+        assert t.observe(0.92) == 16        # inside [target, target+slack)
+        assert t.stats()["raises"] == 0
+        assert t.stats()["backoffs"] == 0
+
+    def test_clamped_at_hi(self):
+        t = RecallTuner(0.99, knob=100, lo=1, hi=128)
+        assert t.observe(0.1) == 128
+        assert t.observe(0.1) == 128        # saturated, not past hi
+
+    def test_persistence_roundtrip(self):
+        t = RecallTuner(0.9, knob=2, lo=1, hi=128)
+        t.observe(0.5)
+        t.observe(0.97)
+        back = RecallTuner.from_dict(t.to_dict())
+        assert back.knob == t.knob
+        assert back.stats() == t.stats()
+
+
+# ---------------------------------------------------------------------------
+# Oracle metrics edge cases (the tuner is only as good as its referee)
+# ---------------------------------------------------------------------------
+
+class TestRecallMetricEdgeCases:
+    def test_k_exceeds_live_rows(self):
+        """True set right-padded with -1 when the DB has fewer than k rows."""
+        rows = _corpus(4, seed=1)
+        true = np.asarray(metrics.brute_force_topk(rows[:2], rows,
+                                                   np.arange(4), 10))
+        assert true.shape == (2, 10)
+        assert (true[:, 4:] == -1).all()          # padding ids
+        assert (true[:, :4] >= 0).all()
+        # a result that returns every live row scores perfect recall
+        assert metrics.recall_at_k(true, true) == 1.0
+
+    def test_duplicate_ids_counted_once(self):
+        true = np.array([[3, 5, 7, -1]])
+        got = np.array([[3, 3, 3, 5]])            # dup hits count once
+        assert metrics.recall_at_k(got, true) == pytest.approx(2 / 3)
+
+    def test_all_tombstoned(self):
+        """Every row deleted: oracle returns -1s, recall is vacuously 1."""
+        rows = _corpus(8, seed=2)
+        dead = np.full(8, -1)
+        true = np.asarray(metrics.brute_force_topk(rows[:2], rows, dead, 5))
+        assert (true == -1).all()
+        got = np.full((2, 5), -1)
+        assert metrics.recall_at_k(got, true) == 1.0
+
+    def test_empty_database(self):
+        true = np.asarray(metrics.brute_force_topk(
+            _corpus(2, seed=3), np.zeros((0, D), np.float32),
+            np.zeros(0, np.int64), 5))
+        assert true.shape == (2, 5) and (true == -1).all()
+
+    def test_mismatched_batch_rejected(self):
+        with pytest.raises(AssertionError):
+            metrics.recall_at_k(np.zeros((2, 5)), np.zeros((3, 5)))
+
+    def test_partial_overlap(self):
+        true = np.array([[0, 1, 2, 3], [4, 5, 6, 7]])
+        got = np.array([[0, 1, 9, 9], [4, 5, 6, 7]])
+        assert metrics.recall_at_k(got, true) == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# Size-based index policy
+# ---------------------------------------------------------------------------
+
+class TestIndexPolicy:
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            _cfg(index_policy="btree")
+        with pytest.raises(ValueError):
+            _cfg(index_policy="hnsw", shard_db=True)
+        with pytest.raises(ValueError):
+            _cfg(index_policy="flat", shard_db=True)
+        with pytest.raises(ValueError):
+            _cfg(target_recall=1.5)
+        with pytest.raises(ValueError):
+            _cfg(hnsw_m=1)
+
+    def test_auto_policy_tracks_size(self):
+        from repro.core import templates
+        th = templates.TemplateThresholds(flat_max_rows=256,
+                                          hnsw_min_rows=1500)
+        coll = Collection("c", _cfg(index_policy="auto"), thresholds=th)
+        coll.build(_corpus(200, seed=4))
+        assert coll.index_policy() == "flat"
+        _, _, path = coll.resolve_query(1, None, None, None)
+        assert path == "full_scan"                # tiny: exact GEMM
+        coll.insert(_corpus(800, seed=5))
+        assert coll.index_policy() == "ivf"
+        coll.insert(_corpus(900, seed=6))
+        assert coll.index_policy() == "hnsw"
+        _, _, path = coll.resolve_query(1, None, None, None)
+        assert path == "hnsw"
+        # deletes shrink it back toward the middle band
+        coll.delete(np.arange(600))
+        assert coll.index_policy() == "ivf"
+
+    def test_fixed_policies_route(self):
+        for pol, want in (("flat", "full_scan"), ("hnsw", "hnsw")):
+            coll = Collection("c", _cfg(index_policy=pol))
+            coll.build(_corpus(500, seed=7))
+            _, _, path = coll.resolve_query(1, None, None, None)
+            assert path == want, pol
+        assert "index_policy" in coll.stats()
+
+    def test_every_policy_answers_with_high_recall(self):
+        x = _corpus(1200, seed=8)
+        for pol in ("flat", "ivf", "hnsw"):
+            coll = Collection("c", _cfg(index_policy=pol, nprobe=32))
+            coll.build(x)
+            true = metrics.brute_force_topk(x[:16], x, np.arange(len(x)), 10)
+            got, _ = coll.query(x[:16], k=10)
+            assert metrics.recall_at_k(
+                np.asarray(got), np.asarray(true)) >= 0.9, pol
+
+
+# ---------------------------------------------------------------------------
+# Recall probe lifecycle
+# ---------------------------------------------------------------------------
+
+class TestRecallProbe:
+    def test_cadence_and_reset(self):
+        from repro.core import templates
+        th = templates.TemplateThresholds(probe_interval_ops=8)
+        coll = Collection("c", _cfg(target_recall=0.9), thresholds=th)
+        coll.build(_corpus(600, seed=9))
+        assert coll.recall_probe_due()            # fresh build: probe now
+        out = coll.recall_probe()
+        assert out["recall"] is not None
+        assert not coll.recall_probe_due()        # counter reset
+        coll.insert(_corpus(8, seed=10))          # 8 ops >= interval
+        assert coll.recall_probe_due()
+
+    def test_disarmed_without_target(self):
+        coll = Collection("c", _cfg())            # target_recall = 0
+        coll.build(_corpus(400, seed=11))
+        assert not coll.recall_probe_due()
+        assert coll._nprobe_tuner is None
+
+    def test_probe_skipped_when_demoted(self):
+        coll = Collection("c", _cfg(target_recall=0.9))
+        coll.build(_corpus(400, seed=12))
+        coll.demote()
+        out = coll.recall_probe()
+        assert out["recall"] is None and out["skipped"] == "warm"
+
+    def test_probe_is_deterministic_per_seq(self):
+        """Same collection name + probe seq -> same sampled queries."""
+        a = Collection("same-name", _cfg(target_recall=0.9))
+        b = Collection("same-name", _cfg(target_recall=0.9))
+        x = _corpus(500, seed=13)
+        a.build(x)
+        b.build(x)
+        ra, rb = a.recall_probe(), b.recall_probe()
+        assert ra["seq"] == rb["seq"] == 0
+        assert ra["recall"] == rb["recall"]
+        assert a.recall_probe()["seq"] == 1       # seq advances
+
+    def test_probe_on_emptied_collection_is_vacuous(self):
+        coll = Collection("c", _cfg(target_recall=0.9))
+        coll.build(_corpus(256, seed=40), ids=np.arange(256))
+        coll.delete(np.arange(256))               # tombstone every row
+        out = coll.recall_probe()
+        assert out["recall"] == 1.0 and out["sample"] == 0
+
+    def test_probe_measures_serving_path_not_probe_batch(self):
+        """A probe batch is large enough to route full_scan by batch size;
+        the probe must measure the policy's steady-state path instead, or
+        the nprobe tuner would never observe the knob it owns."""
+        coll = Collection("c", _cfg(target_recall=0.9))
+        coll.build(_corpus(600, seed=14))
+        out = coll.recall_probe(sample=64)
+        assert out["path"] == "probed"
+        assert out["knob"] is not None
+
+    def test_probe_records_into_stats(self):
+        coll = Collection("c", _cfg(target_recall=0.9))
+        coll.build(_corpus(400, seed=15))
+        coll.recall_probe()
+        s = coll.stats()
+        assert s["last_probe"]["seq"] == 0
+        assert set(s["tuner"]) == {"nprobe", "ef"}
+
+
+# ---------------------------------------------------------------------------
+# The acceptance scenario: drift -> probe detects -> retune restores
+# ---------------------------------------------------------------------------
+
+class TestDriftingWorkloadRetune:
+    TARGET = 0.92
+
+    def test_probe_detects_drift_and_restores_recall(self):
+        """Centroids fit on the base distribution go stale when drifted
+        rows arrive; at nprobe=1 probed recall craters.  The probe loop
+        must observe that against the exact oracle and walk nprobe up
+        until measured recall clears the target again — with live queries
+        succeeding throughout (retuning has zero downtime)."""
+        svc = MemoryService(maintenance=False)
+        svc.create_collection("c", _cfg(nprobe=1, target_recall=self.TARGET))
+        svc.build("c", _corpus(4000, seed=16))
+        coll = svc.collection("c")
+        # drift: a shifted mode the k-means centroids never saw
+        svc.insert("c", _corpus(4000, seed=17, shift=4.0))
+
+        first = coll.recall_probe()
+        assert first["path"] == "probed"
+        assert first["recall"] < self.TARGET      # drift detected
+        assert first["retuned"] and first["knob"] > 1
+
+        stop = threading.Event()
+        errors = []
+
+        def serve():
+            qs = _corpus(4, seed=18, shift=4.0)
+            while not stop.is_set():
+                try:
+                    ids, _ = svc.query("c", qs, k=10)
+                    assert ids.shape == (4, 10)
+                except BaseException as e:  # noqa: BLE001
+                    errors.append(e)
+                    return
+
+        t = threading.Thread(target=serve)
+        t.start()
+        try:
+            restored = first["recall"]
+            for _ in range(12):
+                restored = coll.recall_probe()["recall"]
+                if restored >= self.TARGET:
+                    break
+        finally:
+            stop.set()
+            t.join()
+            svc.shutdown()
+        assert not errors                         # zero query downtime
+        assert restored >= self.TARGET            # oracle-confirmed
+        assert coll.tuned_nprobe() > 1
+
+    def test_controller_schedules_probe_ops(self):
+        """The probe rides the maintenance loop as a background MemoryOp:
+        due collections get exactly one in-flight probe per poll."""
+        from repro.api.service import MaintenanceController
+        svc = MemoryService(maintenance=False)
+        svc.create_collection("c", _cfg(target_recall=0.9))
+        svc.build("c", _corpus(600, seed=19))     # fresh build: probe due
+        ctl = MaintenanceController(svc, poll_interval_s=3600)
+        try:
+            assert ctl.poll_once() >= 1
+            # wait for the submitted probe op to land
+            for _ in range(200):
+                if svc.collection("c").stats()["last_probe"] is not None:
+                    break
+                time.sleep(0.05)
+            assert ctl.stats()["probes_triggered"] == 1
+            assert svc.collection("c").stats()["last_probe"]["seq"] == 0
+            assert ctl.poll_once() == 0           # cadence: not due again
+        finally:
+            ctl.stop()
+            svc.shutdown()
+
+    def test_tuner_state_survives_save_load(self, tmp_path):
+        svc = MemoryService(maintenance=False)
+        svc.create_collection("c", _cfg(nprobe=1, target_recall=0.9))
+        svc.build("c", _corpus(3000, seed=20))
+        svc.insert("c", _corpus(3000, seed=21, shift=4.0))
+        coll = svc.collection("c")
+        for _ in range(4):
+            coll.recall_probe()
+        knob = coll.tuned_nprobe()
+        assert knob > 1
+        svc.save(str(tmp_path))
+        svc.shutdown()
+        svc2 = MemoryService.load(str(tmp_path), maintenance=False)
+        try:
+            assert svc2.collection("c").tuned_nprobe() == knob
+        finally:
+            svc2.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Tuner-owned nprobe vs batch fusion (signature == execution)
+# ---------------------------------------------------------------------------
+
+class TestFusionGroupSplit:
+    # default from_profile thresholds put the full-scan crossover at
+    # batch 4 for this cfg; keep small test batches on the probed path
+    def _th(self):
+        from repro.core import templates
+        return templates.TemplateThresholds(full_scan_batch=32)
+
+    def test_diverged_tuners_split_groups(self):
+        """Two tenants, same cfg: once their tuned nprobe diverges their
+        batch signatures MUST differ — fusing them would scan one tenant
+        with the other's knob."""
+        cfg = _cfg(target_recall=0.9)
+        a = Collection("a", cfg, thresholds=self._th())
+        b = Collection("b", cfg, thresholds=self._th())
+        a.build(_corpus(800, seed=22))
+        b.build(_corpus(800, seed=23))
+        assert (a.batch_signature(4, None, None, None)
+                == b.batch_signature(4, None, None, None))
+        b._nprobe_tuner.observe(0.1)              # b's knob doubles
+        assert a.tuned_nprobe() != b.tuned_nprobe()
+        sa = a.batch_signature(4, None, None, None)
+        sb = b.batch_signature(4, None, None, None)
+        assert sa != sb
+        # the signature element that split them is exactly nprobe
+        assert sa[:5] == sb[:5] and sa[6:] == sb[6:]
+
+    def test_resolved_nprobe_matches_kernel_clamp(self):
+        """resolve_query's clamp must agree with ivf.query_probed's, or the
+        signature would key on a value the kernel silently rewrites."""
+        coll = Collection("c", _cfg(target_recall=0.9),
+                          thresholds=self._th())
+        coll.build(_corpus(400, seed=24))
+        coll._nprobe_tuner._knob = 10_000         # force out-of-range knob
+        _, nprobe, path = coll.resolve_query(4, None, None, None)
+        assert path == "probed"
+        assert nprobe == coll.cfg.n_clusters      # clamped, not raw
+        _, nprobe, _ = coll.resolve_query(4, None, -3, None)
+        assert nprobe == 1                        # floor clamp too
+
+    def test_off_probed_path_nprobe_pinned(self):
+        """Tuner divergence must never split full-scan or graph groups:
+        nprobe is not an execution parameter there and resolves to 0."""
+        cfg = _cfg(index_policy="hnsw", target_recall=0.9)
+        a, b = Collection("a", cfg), Collection("b", cfg)
+        a.build(_corpus(500, seed=25))
+        b.build(_corpus(500, seed=26))
+        b._nprobe_tuner.observe(0.1)
+        assert (a.batch_signature(4, None, None, None)
+                == b.batch_signature(4, None, None, None))
+        _, nprobe, path = a.resolve_query(4, None, None, None)
+        assert (path, nprobe) == ("hnsw", 0)
+
+    def test_fused_split_results_match_sync(self):
+        """query_many over diverged tenants returns exactly what each
+        tenant's sync query returns (groups split, not corrupted)."""
+        cfg = _cfg(target_recall=0.9)
+        svc = MemoryService(maintenance=False)
+        svc.create_collection("a", cfg, thresholds=self._th())
+        svc.create_collection("b", cfg, thresholds=self._th())
+        xa, xb = _corpus(800, seed=27), _corpus(800, seed=28)
+        svc.build("a", xa)
+        svc.build("b", xb)
+        svc.collection("b")._nprobe_tuner.observe(0.1)
+        try:
+            fused = svc.query_many([("a", xa[:6]), ("b", xb[:6])])
+            sync_a = svc.collection("a").query(xa[:6])
+            sync_b = svc.collection("b").query(xb[:6])
+            np.testing.assert_array_equal(fused[0][0], sync_a[0])
+            np.testing.assert_array_equal(fused[1][0], sync_b[0])
+            np.testing.assert_allclose(fused[0][1], sync_a[1], rtol=1e-5)
+            np.testing.assert_allclose(fused[1][1], sync_b[1], rtol=1e-5)
+        finally:
+            svc.shutdown()
+
+    def test_hnsw_lanes_fuse_per_lane(self):
+        """Graph-path tenants batch through the service but are served
+        per-lane: results match sync, and the stacked-GEMM executor
+        refuses hnsw outright."""
+        cfg = _cfg(index_policy="hnsw")
+        svc = MemoryService(maintenance=False)
+        svc.create_collection("a", cfg)
+        svc.create_collection("b", cfg)
+        xa, xb = _corpus(600, seed=29), _corpus(600, seed=30)
+        svc.build("a", xa)
+        svc.build("b", xb)
+        try:
+            fused = svc.query_many([("a", xa[:5]), ("b", xb[:5])])
+            sync_a = svc.collection("a").query(xa[:5])
+            sync_b = svc.collection("b").query(xb[:5])
+            np.testing.assert_array_equal(fused[0][0], sync_a[0])
+            np.testing.assert_array_equal(fused[1][0], sync_b[0])
+            with pytest.raises(ValueError, match="hnsw"):
+                execute_group([svc.collection("a")], [xa[:2]],
+                              cfg, 10, 0, "hnsw")
+        finally:
+            svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Derived HNSW graph tier: IVF lifecycle guarantees hold
+# ---------------------------------------------------------------------------
+
+class TestGraphTierLifecycle:
+    def test_graph_mirrors_writes(self):
+        coll = Collection("c", _cfg(index_policy="hnsw"))
+        coll.build(_corpus(600, seed=31))
+        coll.query(_corpus(2, seed=32), k=5)      # forces graph build
+        assert len(coll._graph) == 600
+        coll.insert(_corpus(50, seed=33), ids=np.arange(600, 650))
+        coll.delete(np.arange(25))
+        assert len(coll._graph) == 625
+        assert set(coll._graph.live_ids().tolist()) == _live_ids(
+            coll.snapshot())
+
+    def test_rebuild_invalidates_then_graph_recovers(self):
+        coll = Collection("c", _cfg(index_policy="hnsw"))
+        x = _corpus(800, seed=34)
+        coll.build(x)
+        coll.query(x[:2], k=5)
+        coll.delete(np.arange(100))
+        coll.rebuild()
+        assert coll._graph is None                # derived copy dropped
+        ids, _ = coll.query(x[200:208], k=10)     # lazily rebuilt
+        assert not np.any(np.isin(ids, np.arange(100)))
+        assert set(coll._graph.live_ids().tolist()) == _live_ids(
+            coll.snapshot())
+
+    def test_concurrent_insert_delete_rebuild_zero_lost_rows(self):
+        """The IVF concurrency acceptance applied to an hnsw-policy
+        collection: writers + rebuilds race, nothing is lost, and the
+        derived graph converges to exactly the live row set."""
+        coll = Collection("c", _cfg(index_policy="hnsw"))
+        x = _corpus(1000, seed=35)
+        coll.build(x, ids=np.arange(1000))
+        coll.query(x[:1], k=1)                    # graph exists before race
+        next_id = [1000]
+        errors = []
+
+        def writer():
+            try:
+                rng = np.random.default_rng(36)
+                for _ in range(8):
+                    base = next_id[0]
+                    next_id[0] += 20
+                    coll.insert(_corpus(20, seed=base),
+                                ids=np.arange(base, base + 20))
+                    coll.delete(rng.integers(0, 500, size=5))
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        def rebuilder():
+            try:
+                for _ in range(3):
+                    coll.rebuild()
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer),
+                   threading.Thread(target=rebuilder)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        live = _live_ids(coll.snapshot())
+        assert set(range(1000, next_id[0])) <= live   # no insert lost
+        coll.query(x[:1], k=1)                    # rebuild graph if dropped
+        assert set(coll._graph.live_ids().tolist()) == live
+
+    def test_hnsw_policy_save_load_roundtrip(self, tmp_path):
+        """The graph is derived, never persisted: a reloaded hnsw-policy
+        collection rebuilds it from the row store and answers with the
+        same recall."""
+        cfg = _cfg(index_policy="hnsw")
+        coll = Collection("c", cfg)
+        x = _corpus(700, seed=37)
+        coll.build(x)
+        coll.delete(np.arange(50))
+        ids_before, _ = coll.query(x[100:116], k=10)
+        coll.save_into(str(tmp_path))
+        back = Collection.load_from(str(tmp_path), "c", cfg)
+        assert back._graph is None                # not persisted
+        assert _live_ids(back.snapshot()) == _live_ids(coll.snapshot())
+        ids_after, _ = back.query(x[100:116], k=10)
+        true = metrics.brute_force_topk(
+            x[100:116], x[50:], np.arange(50, 700), 10)
+        for got in (ids_before, ids_after):
+            assert metrics.recall_at_k(np.asarray(got),
+                                       np.asarray(true)) >= 0.9
