@@ -17,8 +17,11 @@ with an identical execution signature fuse into one padded GEMM dispatch.
 """
 from repro.api.collection import Collection
 from repro.api.ops import MemoryOp, OpFuture
+from repro.api.replication import ReplicaSet
 from repro.api.residency import ResidencyManager
 from repro.api.service import MaintenanceController, MemoryService
+from repro.core.scheduler import AdmissionControl, Overloaded
 
-__all__ = ["Collection", "MaintenanceController", "MemoryOp",
-           "MemoryService", "OpFuture", "ResidencyManager"]
+__all__ = ["AdmissionControl", "Collection", "MaintenanceController",
+           "MemoryOp", "MemoryService", "OpFuture", "Overloaded",
+           "ReplicaSet", "ResidencyManager"]

@@ -48,7 +48,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -148,6 +148,12 @@ class Collection:
         # nests another lock inside it.
         self._graph = None
         self._graph_lock = locking.make_lock("_lock")
+        # Replication shipping hook (repro.api.replication): when set, every
+        # acked write (build/insert/delete) is reported — host-side rows/ids
+        # — from inside the writer critical section, AFTER its state swap,
+        # so hook call order == publication order and an op is shipped iff
+        # it was acked.  The hook must only descend to _ship_lock (15).
+        self._ship_hook = None
         self._approx_live = 0          # host-side live-row estimate (routing)
         self._probe_ops = 0            # ops since the last recall probe
         self._probe_seq = 0            # deterministic probe RNG stream
@@ -551,6 +557,134 @@ class Collection:
                     log.append(op)
 
     # ------------------------------------------------------------------
+    # Replication shipping (repro.api.replication)
+    # ------------------------------------------------------------------
+    def set_ship_hook(self, hook) -> None:
+        """Install/remove (`None`) the replication shipping hook.
+
+        `hook(kind, rows, ids)` is called with host numpy arrays from
+        inside the writer critical section after each acked write's state
+        swap; it must be fast and may only take locks below the writer
+        level (the shipping log's `_ship_lock`, 15).  Prefer
+        `attach_shipper` when a consistent bootstrap snapshot is needed.
+        """
+        with self._lock:
+            self._ship_hook = hook
+
+    def attach_shipper(self, hook) -> dict:
+        """Install `hook` and return a consistent bootstrap snapshot.
+
+        Runs under the writer lock, so no write can land between the
+        snapshot read and the hook install: every write is either in the
+        returned snapshot or will be reported through the hook — the
+        replication tier's no-lost-acked-writes guarantee starts here.
+        Returns ``{"built", "rows", "ids", "key", "next_id"}``; rows/ids
+        are the flat slot arrays (ids < 0 = dead slots) when built, else
+        None.  Sharded collections don't ship (the per-shard delta log
+        already replicates across the mesh); ValueError.
+        """
+        if self.sharded:
+            raise ValueError(
+                f"collection {self.name!r} is mesh-sharded; replication "
+                "shipping supports unsharded collections only")
+        with self._hot_writer():
+            with self._lock:
+                self._ship_hook = hook
+                built = self._built
+                state = self._state
+                key = self.key
+                next_id = self._next_id
+            rows = ids = None
+            if built:
+                rows, ids = ivf.flat_rows_host(state)
+        return {"built": built, "rows": rows, "ids": ids, "key": key,
+                "next_id": next_id}
+
+    def _ship(self, kind: str, rows, ids) -> None:
+        """Report one acked write to the shipping hook (no-op when unset).
+        Caller holds `_writer_lock`; rows/ids are device-gettable."""
+        with self._lock:
+            hook = self._ship_hook
+        if hook is None:
+            return
+        rows_np = None if rows is None else np.asarray(
+            jax.device_get(rows), np.float32)
+        ids_np = np.asarray(jax.device_get(ids), np.int32)
+        hook(kind, rows_np, ids_np)
+
+    def apply_delta_batch(self, ops: Sequence[ivf.DeltaOp]) -> dict:
+        """Apply a shipped delta batch in order with ONE state swap.
+
+        The replica-side apply path: the first op runs through the shared
+        (copying) kernel — concurrent readers may hold the published
+        snapshot, so it must not be donated — which yields a sole-owned
+        intermediate state; the remaining ops replay onto it with the
+        donating `ivf.replay` helpers (no per-op copies), and the result
+        publishes atomically.  A crash mid-batch therefore leaves the
+        previously published state intact: batches are all-or-nothing,
+        which is what lets the replication watermark advance only on
+        entry boundaries.  Never calls the shipping hook — applying
+        shipped writes on a replica must not re-ship them.
+
+        Returns ``{"applied", "inserted", "spilled", "tombstoned"}``.
+        """
+        if self.sharded:
+            raise ValueError(
+                f"collection {self.name!r} is mesh-sharded; apply_delta_batch "
+                "supports unsharded replicas only")
+        if not ops:
+            return {"applied": 0, "inserted": 0, "spilled": 0,
+                    "tombstoned": 0}
+        assert self._built, \
+            f"build() collection {self.name!r} before applying deltas"
+        max_id = -1
+        for op in ops:
+            if op.kind == "insert":
+                max_id = max(max_id, int(np.max(np.asarray(op.ids))))
+        with self._hot_writer():
+            first, rest = ops[0], list(ops[1:])
+            spilled = tombstoned = inserted = 0
+            if first.kind == "insert":
+                state, sp = ivf.insert_shared(
+                    self._state, jnp.asarray(first.rows, jnp.float32),
+                    jnp.asarray(first.ids, jnp.int32), self.cfg)
+                spilled += int(sp)
+                inserted += int(np.asarray(first.ids).shape[0])
+            else:
+                state, n_hit = ivf.delete_shared(
+                    self._state, jnp.asarray(first.ids, jnp.int32))
+                tombstoned += int(n_hit)
+            if rest:
+                rest = [ivf.DeltaOp(
+                    op.kind,
+                    None if op.rows is None else jnp.asarray(op.rows,
+                                                             jnp.float32),
+                    jnp.asarray(op.ids, jnp.int32)) for op in rest]
+                state, sp, tomb = ivf.replay(state, rest, self.cfg)
+                spilled += int(sp)
+                tombstoned += int(tomb)
+                inserted += sum(int(np.asarray(op.ids).shape[0])
+                                for op in rest if op.kind == "insert")
+            jax.block_until_ready(state.lists)
+            with self._lock:
+                self._shard_pressure[0]["spilled"] += spilled
+                self._shard_pressure[0]["tombstones"] += tombstoned
+                self._approx_live = max(
+                    0, self._approx_live + inserted - tombstoned)
+                self._next_id = max(self._next_id, max_id + 1)
+            self._swap(state, inserts=inserted, deletes=tombstoned,
+                       spilled=spilled)
+            for op in ops:
+                rows = None if op.rows is None else jnp.asarray(op.rows)
+                ids = jnp.asarray(op.ids, jnp.int32)
+                self._log_delta(op.kind, rows, ids)
+                self._graph_apply(op.kind, np.asarray(op.rows)
+                                  if op.rows is not None else None,
+                                  np.asarray(op.ids))
+        return {"applied": len(ops), "inserted": inserted,
+                "spilled": spilled, "tombstoned": tombstoned}
+
+    # ------------------------------------------------------------------
     # Raw ops (paper templates); the service routes these via the scheduler.
     # ------------------------------------------------------------------
     def _check_shardable(self, kind: str, n: int) -> None:
@@ -615,6 +749,8 @@ class Collection:
                 self._probe_ops = self.thresholds.probe_interval_ops
             self._swap(state, rebuilds=1, spilled=spilled)
             self._graph_invalidate()   # derived graph lazily rebuilds
+            if not self.sharded:
+                self._ship("build", x, ids)
         return {"build_s": time.perf_counter() - t0, "spilled": spilled}
 
     def insert(self, vectors, ids=None) -> int:
@@ -654,6 +790,7 @@ class Collection:
             # mirror into the derived HNSW graph (no-op until one exists);
             # still under the writer lock, so graph order == state order
             self._graph_apply("insert", np.asarray(x), np.asarray(ids))
+            self._ship("insert", x, ids)
         return spilled
 
     def delete(self, ids) -> int:
@@ -685,6 +822,7 @@ class Collection:
             # graph delete is idempotent per id — absent ids are a no-op,
             # matching the state's "ids not present contribute nothing"
             self._graph_apply("delete", None, np.asarray(ids))
+            self._ship("delete", None, ids)
         return n_hit
 
     def query(self, queries, k: Optional[int] = None,

@@ -49,7 +49,8 @@ from repro.api.residency import ResidencyManager
 from repro.configs.base import EngineConfig
 from repro.core import locking
 from repro.core import templates
-from repro.core.scheduler import Task, WindowedScheduler
+from repro.core.scheduler import AdmissionControl, Overloaded, Task, \
+    WindowedScheduler
 
 SERVICE_FILE = "service.json"
 _NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
@@ -88,6 +89,7 @@ class MaintenanceController:
         self.demotions_triggered = 0
         self.probes_triggered = 0
         self.failed = 0
+        self.shed = 0
         self.last_error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._run,
                                         name="ame-maintenance", daemon=True)
@@ -130,7 +132,15 @@ class MaintenanceController:
         except BaseException as e:  # noqa: BLE001 — release the slot
             with self._lock:
                 self._inflight.pop(key, None)
-                if not isinstance(e, KeyError):
+                if isinstance(e, Overloaded):
+                    # admission control shed this background op — by
+                    # design, maintenance yields to serving traffic under
+                    # overload.  Not a failure: back off one poll interval
+                    # and re-offer once the queues drain.
+                    self.shed += 1
+                    self._backoff_until[key] = (
+                        time.monotonic() + self.poll_interval_s)
+                elif not isinstance(e, KeyError):
                     self.failed += 1
                     self.last_error = e
                     self._backoff_until[key] = (
@@ -197,6 +207,7 @@ class MaintenanceController:
     def stats(self) -> dict:
         with self._lock:
             return {"triggered": self.triggered, "failed": self.failed,
+                    "shed": self.shed,
                     "demotions_triggered": self.demotions_triggered,
                     "probes_triggered": self.probes_triggered,
                     "inflight": sorted(
@@ -230,7 +241,15 @@ class MemoryService:
                  device_budget_bytes: Optional[int] = None,
                  residency_dir: Optional[str] = None,
                  idle_demote_s: Optional[float] = None,
-                 cold_after_s: Optional[float] = None):
+                 cold_after_s: Optional[float] = None,
+                 admission: Optional[AdmissionControl] = None):
+        # admission control: per-backend queue-depth/queue-wait limits for
+        # the (owned) scheduler — overload raises a typed
+        # `scheduler.Overloaded` from submit instead of queueing without
+        # bound; background maintenance is shed before latency queries
+        # (see AdmissionControl).  Ignored when an external scheduler is
+        # passed (configure that scheduler directly).
+        self._admission = admission
         self._scheduler = scheduler
         self._own_scheduler = scheduler is None
         self.batch_window = batch_window
@@ -275,7 +294,7 @@ class MemoryService:
         """Lazily started so idle services don't hold worker threads."""
         with self._lock:
             if self._scheduler is None:
-                self._scheduler = WindowedScheduler()
+                self._scheduler = WindowedScheduler(admission=self._admission)
             return self._scheduler
 
     # ------------------------------------------------------------------
@@ -332,6 +351,7 @@ class MemoryService:
         if op.batch and op.kind == "query":
             fut._on_wait = self.flush     # waiting on a parked op flushes
             with self._lock:
+                # analyze: ok(LO002) list.append on _pending, not ShippingLog.append
                 self._pending.append((op, fut))
                 full = len(self._pending) >= self.batch_window
             if full:

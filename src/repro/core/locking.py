@@ -7,8 +7,13 @@ outermost first:
 
     _rebuild_locks  (40)  per-shard rebuild serialization; taken with no
                           other hierarchy lock held
+    _repl_lock      (35)  ReplicaSet pump/failover serialization — held
+                          while applying shipped deltas to replicas, which
+                          takes their admission + writer locks below
     _admit_lock     (30)  ResidencyManager admission/eviction serialization
     _writer_lock    (20)  per-collection writer serialization
+    _ship_lock      (15)  per-collection shipping-log append/tail — written
+                          from inside the primary's writer critical section
     _lock           (10)  leaf locks: snapshot-pointer/counter/registry
                           sections (Collection, ResidencyManager,
                           MaintenanceController, MemoryService, StackCache)
@@ -47,8 +52,10 @@ from typing import Dict, List, Set, Tuple
 # hierarchy name -> level; acquisition order must strictly descend
 LEVELS: Dict[str, int] = {
     "_rebuild_locks": 40,
+    "_repl_lock": 35,
     "_admit_lock": 30,
     "_writer_lock": 20,
+    "_ship_lock": 15,
     "_lock": 10,
 }
 

@@ -39,6 +39,55 @@ from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 import jax
 
 
+class Overloaded(RuntimeError):
+    """Typed admission-control rejection: the target backend's queue is at
+    its configured limit (or the estimated queue wait exceeds the bound).
+
+    Raised from `WindowedScheduler.submit` *before* the task enters the
+    queue, so a rejected op costs the caller one exception rather than an
+    unbounded wait — overload degrades to bounded latency, never to an
+    unbounded heap.  Callers can retry after a drain or shed the work to a
+    read replica (`repro.api.replication.ReplicaSet.query` does exactly
+    that for queries).
+    """
+
+    def __init__(self, backend: str, depth: int, limit: float,
+                 reason: str = "queue-depth"):
+        self.backend = backend
+        self.depth = depth
+        self.limit = limit
+        self.reason = reason
+        super().__init__(
+            f"backend {backend!r} overloaded ({reason}: {depth} vs limit "
+            f"{limit}); retry after drain or shed to a replica")
+
+
+@dataclass(frozen=True)
+class AdmissionControl:
+    """Per-backend queue-depth / queue-wait limits for the scheduler.
+
+    `max_queue_depth` bounds how many tasks may sit queued (not yet
+    running) per backend class.  The background class gets only
+    `background_frac` of that budget, so under sustained overload
+    maintenance work is shed strictly before latency-class queries —
+    rebuilds are deferrable, serving traffic is not.  `max_queue_wait_s`
+    additionally rejects tasks whose *estimated* queue wait (current depth
+    x the backend's observed mean task time / its worker count) exceeds
+    the bound, and caps how long `submit` may block on the submission
+    window before rejecting — a full window cannot hang an admitted
+    caller indefinitely.
+    """
+
+    max_queue_depth: int = 64
+    max_queue_wait_s: Optional[float] = None
+    background_frac: float = 0.5
+
+    def depth_limit(self, backend: str) -> int:
+        if backend == "background":
+            return max(1, int(self.max_queue_depth * self.background_frac))
+        return self.max_queue_depth
+
+
 @dataclass
 class Task:
     fn: Callable[[], Any]
@@ -84,13 +133,15 @@ class WindowedScheduler:
 
     def __init__(self, window: int = 8, mode: str = "windowed",
                  backends: Dict[str, int] | None = None,
-                 history: int = 1024):
+                 history: int = 1024,
+                 admission: Optional[AdmissionControl] = None):
         assert mode in ("windowed", "all", "serial")
         self.window = window if mode == "windowed" else (1 if mode == "serial" else 1 << 30)
         self.mode = mode
         # worker threads per backend class (paper: workers bound to CPU/GPU/NPU)
         self.backends = backends or {"latency": 1, "throughput": 1, "background": 1}
         self.history = history
+        self.admission = admission
         self._cond = threading.Condition()
         # one priority heap per backend class; tasks for classes nobody owns
         # get their own heap and are picked up by stealing workers
@@ -105,6 +156,13 @@ class WindowedScheduler:
         self._n_completed = 0
         self._peak_inflight_bytes = 0
         self._inflight_bytes = 0
+        # admission watermarks: per-backend queued-depth peaks and shed
+        # counts (kept even with admission off — depth peaks are a free
+        # overload diagnostic), plus per-backend exec-time aggregates that
+        # feed the queue-wait estimate
+        self._depth_peak: Dict[str, int] = {}
+        self._shed: Dict[str, int] = {}
+        self._backend_exec: Dict[str, Dict[str, float]] = {}
         self._threads: List[threading.Thread] = []
         for backend, n in self.backends.items():
             for i in range(n):
@@ -115,9 +173,58 @@ class WindowedScheduler:
                 self._threads.append(t)
 
     # ------------------------------------------------------------------
+    def _admit(self, task: Task) -> None:
+        """Admission check for `task`'s backend; raises `Overloaded`.
+
+        Depth is read under the condvar but the subsequent window acquire
+        is not atomic with it, so the limit is a watermark (off by at most
+        the number of concurrent submitters), which is exactly what
+        bounded-latency overload control needs — not a hard invariant.
+        """
+        adm = self.admission
+        with self._cond:
+            depth = len(self._queues.get(task.backend, ()))
+            limit = adm.depth_limit(task.backend)
+            if depth >= limit:
+                self._shed[task.backend] = self._shed.get(task.backend, 0) + 1
+                raise Overloaded(task.backend, depth, limit)
+            if adm.max_queue_wait_s is not None:
+                est = self._est_wait_locked(task.backend, depth)
+                if est is not None and est > adm.max_queue_wait_s:
+                    self._shed[task.backend] = (
+                        self._shed.get(task.backend, 0) + 1)
+                    raise Overloaded(task.backend, depth, adm.max_queue_wait_s,
+                                     reason=f"est queue-wait {est:.3f}s")
+
+    def _est_wait_locked(self, backend: str, depth: int) -> Optional[float]:
+        """Estimated queue wait: depth x mean task time / workers.  None
+        until the backend has completed at least one task (no estimate —
+        admit).  Caller holds `_cond`."""
+        agg = self._backend_exec.get(backend)
+        if not agg or not agg["n"]:
+            return None
+        workers = max(1, self.backends.get(backend, 1))
+        return depth * (agg["total_s"] / agg["n"]) / workers
+
     def submit(self, task: Task, block: bool = True) -> Task:
-        """Windowed submission: blocks while `window` tasks are in flight."""
-        self._sem.acquire()
+        """Windowed submission: blocks while `window` tasks are in flight.
+
+        With admission control configured, an over-limit backend queue (or
+        a submission window that stays full past `max_queue_wait_s`)
+        raises `Overloaded` instead of queueing/blocking — the submit path
+        has bounded latency under overload.
+        """
+        if self.admission is not None:
+            self._admit(task)
+            wait = self.admission.max_queue_wait_s
+            if not self._sem.acquire(timeout=wait if wait else 30.0):
+                with self._cond:
+                    self._shed[task.backend] = (
+                        self._shed.get(task.backend, 0) + 1)
+                raise Overloaded(task.backend, self.window, self.window,
+                                 reason="submission window full")
+        else:
+            self._sem.acquire()
         task.submit_t = time.perf_counter()
         with self._cond:
             self._seq += 1
@@ -127,6 +234,9 @@ class WindowedScheduler:
                                             self._inflight_bytes)
             heapq.heappush(self._queues.setdefault(task.backend, []),
                            (task.priority, self._seq, task))
+            depth = len(self._queues[task.backend])
+            if depth > self._depth_peak.get(task.backend, 0):
+                self._depth_peak[task.backend] = depth
             self._cond.notify_all()
         if block and self.mode == "serial":
             task.done.wait()
@@ -202,6 +312,10 @@ class WindowedScheduler:
                 agg["n"] += 1
                 agg["wait_total"] += task.queue_wait
                 agg["lat_total"] += task.latency
+                bex = self._backend_exec.setdefault(
+                    task.backend, {"n": 0, "total_s": 0.0})
+                bex["n"] += 1
+                bex["total_s"] += task.end_t - task.start_t
             self._sem.release()
             task.done.set()
             # _outstanding is decremented only after done.set(), so a
@@ -213,11 +327,22 @@ class WindowedScheduler:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
+        adm = self.admission
         with self._cond:
             recent = list(self.completed)
             agg = {k: dict(v) for k, v in self._agg.items()}
             peak = self._peak_inflight_bytes
             n_completed = self._n_completed
+            admission = {
+                "enabled": adm is not None,
+                "queue_depth": {b: len(q) for b, q in self._queues.items()},
+                "depth_peak": dict(self._depth_peak),
+                "shed": dict(self._shed),
+            }
+            if adm is not None:
+                admission["limits"] = {
+                    b: adm.depth_limit(b) for b in self._queues}
+                admission["max_queue_wait_s"] = adm.max_queue_wait_s
 
         def pct(xs, p):
             # None, not 0.0, when every sample of this kind was evicted
@@ -228,7 +353,7 @@ class WindowedScheduler:
             return 1e3 * xs[min(len(xs) - 1, int(p * len(xs)))]
 
         out = {"peak_inflight_bytes": peak, "completed": n_completed,
-               "history_retained": len(recent)}
+               "history_retained": len(recent), "admission": admission}
         for kind, a in agg.items():
             lats = [t.latency for t in recent if t.kind == kind]
             out[kind] = {

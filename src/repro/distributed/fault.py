@@ -17,17 +17,30 @@ from typing import Deque, Optional
 
 
 class PreemptionGuard:
-    """SIGTERM/SIGINT -> request a checkpoint at the next step boundary."""
+    """SIGTERM -> request a checkpoint/drain at the next step boundary.
+
+    Signal handlers can only be installed from the main thread; off the
+    main thread the guard degrades gracefully — it never even attempts the
+    install (the previous code relied on catching `signal.signal`'s
+    ValueError, which still races teardown and masks real ValueErrors from
+    an already-installed chain) and stays fully functional through the
+    programmatic path (`request()` / `should_checkpoint`), which is how
+    the replication tier triggers its planned-failover drain.  `installed`
+    reports whether a handler is live; `uninstall()` restores whatever
+    handler was displaced (tests, embedders with their own signal policy).
+    """
 
     def __init__(self, install: bool = True):
         self._requested = threading.Event()
         self._prev = {}
-        if install:
+        self.installed = False
+        if install and threading.current_thread() is threading.main_thread():
             for sig in (signal.SIGTERM,):
                 try:
                     self._prev[sig] = signal.signal(sig, self._handler)
-                except ValueError:
-                    pass   # non-main thread (tests)
+                    self.installed = True
+                except (ValueError, OSError):
+                    pass   # exotic embedders (no signal support)
 
     def _handler(self, signum, frame):
         self._requested.set()
@@ -41,6 +54,17 @@ class PreemptionGuard:
 
     def reset(self):
         self._requested.clear()
+
+    def uninstall(self) -> None:
+        """Restore the displaced handlers (idempotent; main thread only —
+        elsewhere there is nothing installed to restore)."""
+        prev, self._prev = self._prev, {}
+        for sig, handler in prev.items():
+            try:
+                signal.signal(sig, handler)
+            except (ValueError, OSError):
+                pass
+        self.installed = False
 
 
 class StragglerMonitor:
@@ -59,8 +83,20 @@ class StragglerMonitor:
     def start(self):
         self._t0 = time.perf_counter()
 
+    @property
+    def running(self) -> bool:
+        return self._t0 is not None
+
     def stop(self) -> dict:
-        assert self._t0 is not None
+        """Close the step opened by `start()` and classify it.
+
+        A stop() without a matching start() raises (a silent 0-duration
+        sample would poison the median every flagged step is judged
+        against) — but with a typed error, not a bare assert that
+        `python -O` would strip from the production loop.
+        """
+        if self._t0 is None:
+            raise RuntimeError("StragglerMonitor.stop() without start()")
         dt = time.perf_counter() - self._t0
         self._t0 = None
         out = {"step_s": dt, "straggler": False}

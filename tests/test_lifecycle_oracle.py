@@ -24,7 +24,7 @@ import jax
 
 from conftest import live_ids as _live_ids
 
-from repro.api import Collection
+from repro.api import Collection, MemoryService, ReplicaSet
 from repro.configs.base import EngineConfig
 from repro.core import metrics
 from repro.core import templates
@@ -201,6 +201,91 @@ def test_heavy_churn_never_loses_rows():
 
 
 # ---------------------------------------------------------------------------
+# Replicated policy: the oracle checks the primary after every acked op and
+# each replica at its own applied-seq watermark
+# ---------------------------------------------------------------------------
+
+def run_replicated_lifecycle(op_plan, data_seed, n_replicas=2):
+    """Interleave acked writes with shipping pumps under the oracle.
+
+    `history[s]` is the oracle's live-id set immediately after the op that
+    shipped as seq `s` — replication must make every replica's state equal
+    the history entry at its watermark (shipping preserves op order, and a
+    tombstoned id can never resurrect on a replica, because no later
+    history entry contains it).  Plans use insert/delete/query/pump only:
+    rebuild is a local optimization that deliberately does not ship.
+    """
+    name = "oracle-repl"
+    rs = ReplicaSet(MemoryService(maintenance=False), ship_batch=4,
+                    n_replicas=n_replicas)
+    rs.create_collection(name, _cfg())
+    rng = np.random.default_rng(data_seed)
+    oracle = Oracle()
+    floor = RECALL_FLOOR["ivf"]
+
+    rows = _rows(rng, 256)
+    rs.build(name, rows, ids=oracle.insert(rows))
+    history = {0: frozenset()}            # watermark 0 = unbuilt bootstrap
+    history[1] = frozenset(oracle.live)   # the build ships as seq 1
+
+    def check_replicas():
+        for rep in rs.replicas:
+            mark = rep.watermark(name)
+            if mark == 0:
+                continue                  # nothing applied yet (unbuilt)
+            got = _live_ids(rep.service.collection(name).snapshot())
+            assert got == set(history[mark]), (
+                f"{rep.name} at watermark {mark} diverged from the oracle "
+                "history (lost or resurrected a shipped write)")
+
+    for kind, size in op_plan:
+        if kind == "insert":
+            n = max(2, (size // 2) * 2)
+            rows = _rows(rng, n)
+            rs.insert(name, rows, ids=oracle.insert(rows))
+        elif kind == "delete":
+            live = sorted(oracle.live)
+            if not live:
+                continue
+            victims = rng.choice(live, size=min(size, len(live)),
+                                 replace=False)
+            oracle.delete(victims)
+            rs.delete(name, victims)
+        elif kind == "query":
+            _check_recall(rs.primary.collection(name), oracle, rng, floor)
+            continue                      # reads ship nothing
+        elif kind == "pump":
+            rs.pump(max_batches=1)
+            check_replicas()
+            continue
+        history[rs._logs[name].last_seq()] = frozenset(oracle.live)
+        _check_ids(rs.primary.collection(name), oracle)
+
+    while any(rep.watermark(name) < rs._logs[name].last_seq()
+              for rep in rs.replicas):
+        rs.pump()
+    check_replicas()
+    qs = _rows(rng, 16)
+    p_ids, p_scores = rs.primary.query(name, qs)
+    for rep in rs.replicas:               # caught up => bitwise identical
+        r_ids, r_scores = rep.service.query(name, qs)
+        np.testing.assert_array_equal(p_ids, r_ids)
+        np.testing.assert_array_equal(p_scores, r_scores)
+    rs.shutdown()
+    return oracle
+
+
+PLAN_R = [("insert", 32), ("pump", 0), ("delete", 24), ("insert", 16),
+          ("pump", 0), ("query", 0), ("delete", 120), ("pump", 0),
+          ("insert", 48), ("delete", 8), ("pump", 0), ("query", 0)]
+
+
+@pytest.mark.tier1
+def test_replicated_lifecycle_matches_oracle():
+    run_replicated_lifecycle(PLAN_R, data_seed=31)
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis-generated interleavings (separate seeded CI job; excluded from
 # tier-1 via `-m "not property"` — see pytest.ini)
 # ---------------------------------------------------------------------------
@@ -226,9 +311,32 @@ if HAVE_HYPOTHESIS:
     @given(plan=op_strategy, data_seed=st.integers(0, 2**16))
     def test_property_lifecycle_matches_oracle(policy, plan, data_seed):
         run_lifecycle(policy, plan, data_seed)
+
+    repl_op_strategy = st.lists(
+        st.one_of(
+            st.tuples(st.just("insert"), st.integers(2, 64)),
+            st.tuples(st.just("delete"), st.integers(1, 128)),
+            st.tuples(st.just("query"), st.just(0)),
+            st.tuples(st.just("pump"), st.just(0)),
+        ),
+        min_size=1, max_size=12)
+
+    @pytest.mark.property
+    @seed(_HYP_SEED)
+    @settings(max_examples=10, deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(plan=repl_op_strategy, data_seed=st.integers(0, 2**16))
+    def test_property_replicated_lifecycle_matches_oracle(plan, data_seed):
+        run_replicated_lifecycle(plan, data_seed)
 else:
     @pytest.mark.property
     @pytest.mark.skip(reason="hypothesis not installed (optional dep; the "
                              "property CI job installs it)")
     def test_property_lifecycle_matches_oracle():
+        pass
+
+    @pytest.mark.property
+    @pytest.mark.skip(reason="hypothesis not installed (optional dep; the "
+                             "property CI job installs it)")
+    def test_property_replicated_lifecycle_matches_oracle():
         pass

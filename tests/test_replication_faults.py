@@ -1,0 +1,395 @@
+"""Fault-injection harness for the replicated serving tier.
+
+Deterministic fault plans (tier-1) drive the `ReplicaSet` pump through
+dropped / delayed / duplicated shipped batches, a replica killed
+mid-apply, and the primary killed mid-window, asserting the protocol's
+contracts:
+
+* zero lost acked writes across primary kill + failover (every write
+  that returned to its caller is on the promoted primary),
+* bitwise query parity once a replica's watermark catches up (shipped
+  builds replay with the primary's exact PRNG key, so replica state is
+  byte-identical, not merely equivalent),
+* bounded staleness: routing refuses replicas beyond `max_lag_ops` and
+  lag is observable in `stats()`.
+
+Randomized interleavings of the same invariants run under the `property`
+marker (seeded; excluded from tier-1 via pytest.ini's `-m "not
+property"`).
+"""
+import numpy as np
+import pytest
+
+from conftest import live_ids
+
+from repro.api import MemoryService, ReplicaSet
+from repro.api.replication import (NoFreshReplica, PrimaryDead, ReplicaDead,
+                                   ShippingLog)
+from repro.configs.base import EngineConfig
+from repro.core.scheduler import AdmissionControl, Overloaded, Task
+
+D = 128
+COLL = "mem"
+
+
+def _cfg(**kw):
+    base = dict(dim=D, n_clusters=128, list_capacity=64, nprobe=64, k=10,
+                use_kernel=False, kmeans_iters=3)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _rows(rng, n):
+    return rng.standard_normal((n, D)).astype(np.float32)
+
+
+class ScriptedFaults:
+    """Deterministic fault plan for the pump.
+
+    `ship` maps (replica_name, first_seq_of_batch) -> verdict, fired once
+    each; `kill_at` maps replica_name -> seq whose apply raises
+    `ReplicaDead` (fired once).  Anything unscripted is "ok".
+    """
+
+    def __init__(self, ship=None, kill_at=None):
+        self.ship = dict(ship or {})
+        self.kill_at = dict(kill_at or {})
+        self.fired = []
+
+    def on_ship(self, replica, collection, entries):
+        verdict = self.ship.pop((replica, entries[0].seq), "ok")
+        if verdict != "ok":
+            self.fired.append((replica, entries[0].seq, verdict))
+        return verdict
+
+    def on_apply(self, replica, collection, entry):
+        if self.kill_at.get(replica) == entry.seq:
+            del self.kill_at[replica]
+            self.fired.append((replica, entry.seq, "kill"))
+            raise ReplicaDead(f"{replica} killed applying seq {entry.seq}")
+
+
+def _mk(injector=None, n_replicas=2, ship_batch=4, max_lag_ops=1024,
+        n0=256, seed=0, **svc_kw):
+    """ReplicaSet over a fresh primary with one built collection; returns
+    (rs, rng, acked) where `acked` is the live-id oracle — the set of ids
+    whose write RETURNED (was acked) on the primary."""
+    svc = MemoryService(maintenance=False, **svc_kw)
+    rs = ReplicaSet(svc, n_replicas=n_replicas, ship_batch=ship_batch,
+                    max_lag_ops=max_lag_ops, fault_injector=injector)
+    rs.create_collection(COLL, _cfg())
+    rng = np.random.default_rng(seed)
+    rows = _rows(rng, n0)
+    rs.build(COLL, rows, ids=np.arange(n0))
+    acked = set(range(n0))
+    return rs, rng, acked
+
+
+def _churn(rs, rng, acked, inserts=3, deletes=2, batch=8):
+    """Acked write bursts against the primary, mirrored into `acked`."""
+    next_id = max(acked) + 1 if acked else 0
+    for _ in range(inserts):
+        ids = np.arange(next_id, next_id + batch)
+        rs.insert(COLL, _rows(rng, batch), ids=ids)
+        acked.update(int(i) for i in ids)      # returned => acked
+        next_id += batch
+    live = sorted(acked)
+    for _ in range(deletes):
+        victims = rng.choice(live, size=min(4, len(live)), replace=False)
+        rs.delete(COLL, victims)
+        acked.difference_update(int(v) for v in victims)
+        live = sorted(acked)
+
+
+def _primary_live(rs):
+    return live_ids(rs.primary.collection(COLL).snapshot())
+
+
+def _replica_live(rep):
+    return live_ids(rep.service.collection(COLL).snapshot())
+
+
+def _assert_parity(rs, rep, rng):
+    """Caught-up replica must answer queries bitwise-identically."""
+    qs = _rows(rng, 8)
+    p_ids, p_scores = rs.primary.query(COLL, qs)
+    r_ids, r_scores = rep.service.query(COLL, qs)
+    np.testing.assert_array_equal(p_ids, r_ids)
+    np.testing.assert_array_equal(p_scores, r_scores)
+
+
+# ---------------------------------------------------------------------------
+# Happy path + single-fault plans (tier-1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_ship_and_bitwise_parity():
+    rs, rng, acked = _mk()
+    _churn(rs, rng, acked)
+    rs.pump()
+    assert _primary_live(rs) == acked
+    for rep in rs.replicas:
+        assert rep.watermark(COLL) == rs._logs[COLL].last_seq()
+        assert _replica_live(rep) == acked
+        _assert_parity(rs, rep, rng)
+    # every live replica caught up => the log trims to empty
+    assert rs.stats()["log_retained"][COLL] == 0
+    rs.shutdown()
+
+
+@pytest.mark.tier1
+def test_dropped_batch_is_lag_not_loss():
+    # drop replica-0's first two shipped batches (the build is seq 1, so
+    # with ship_batch=4 batches start at seqs 1 and 5)
+    faults = ScriptedFaults(ship={("replica-0", 1): "drop",
+                                  ("replica-0", 5): "drop"})
+    rs, rng, acked = _mk(injector=faults)
+    _churn(rs, rng, acked)
+    out = rs.pump()
+    assert len(faults.fired) >= 1
+    lag = rs.lag(COLL)[COLL]
+    assert lag["replica-0"] > 0, "dropped batch must show as lag"
+    assert lag["replica-1"] == 0
+    # the dropped entries are still in the log: the next pumps re-ship
+    # them (at-least-once delivery) and the replica fully recovers
+    while rs.lag(COLL)[COLL]["replica-0"] > 0:
+        out = rs.pump()
+        assert out["shipped"] >= 0
+    assert _replica_live(rs.replicas[0]) == acked
+    _assert_parity(rs, rs.replicas[0], rng)
+    assert rs.stats()["fault_counts"]["drop"] == 2
+    rs.shutdown()
+
+
+@pytest.mark.tier1
+def test_duplicate_batch_applies_once():
+    faults = ScriptedFaults(ship={("replica-1", 1): "duplicate"})
+    rs, rng, acked = _mk(injector=faults)
+    _churn(rs, rng, acked)
+    rs.pump()
+    assert faults.fired == [("replica-1", 1, "duplicate")]
+    # idempotent apply: the duplicated batch is skipped at the watermark,
+    # so no id is double-inserted and parity stays bitwise
+    for rep in rs.replicas:
+        assert _replica_live(rep) == acked
+        _assert_parity(rs, rep, rng)
+    rs.shutdown()
+
+
+@pytest.mark.tier1
+def test_delayed_batch_bounded_staleness():
+    # delay replica-0's first shipped batch (first seq = 1: the build)
+    faults = ScriptedFaults(ship={("replica-0", 1): "delay"})
+    rs, rng, acked = _mk(injector=faults, max_lag_ops=4)
+    _churn(rs, rng, acked, inserts=4, deletes=2)    # 6 ops past the build
+    rs.pump()
+    lag = rs.lag(COLL)[COLL]
+    assert lag["replica-0"] > rs.max_lag_ops >= 0
+    # routing must refuse the stale replica...
+    rs.kill_replica("replica-1")
+    with pytest.raises(NoFreshReplica):
+        rs.query(COLL, _rows(rng, 2), prefer="replica")
+    # ...until the delayed batches arrive and staleness re-bounds
+    rs.pump()
+    assert rs.lag(COLL)[COLL]["replica-0"] == 0
+    ids, _ = rs.query(COLL, _rows(rng, 2), prefer="replica")
+    assert ids.shape == (2, 10)
+    assert rs.stats()["replica_queries"] == 1
+    rs.shutdown()
+
+
+@pytest.mark.tier1
+def test_kill_replica_mid_apply_is_atomic():
+    # kill replica-0 while it applies seq 3 — mid-batch (after the first
+    # pump ships the build at seq 1, the churn batch spans seqs 2-5)
+    faults = ScriptedFaults(kill_at={"replica-0": 3})
+    rs, rng, acked = _mk(injector=faults)
+    rs.pump()                      # both replicas apply the build (seq 1)
+    before = {rep.name: rep.watermark(COLL) for rep in rs.replicas}
+    _churn(rs, rng, acked)
+    rs.pump()
+    dead, alive = rs.replicas[0], rs.replicas[1]
+    assert not dead.alive and alive.alive
+    # atomic batch apply: the killed replica's watermark and state are
+    # exactly the pre-batch publication — no torn half-applied batch
+    assert dead.watermark(COLL) == before["replica-0"] == 1
+    assert _replica_live(dead) == set(range(256))
+    # the survivor is unaffected and the set still serves + fails over
+    assert _replica_live(alive) == acked
+    rs.kill_primary()
+    out = rs.failover()
+    assert out["promoted"] == "replica-1"
+    assert _primary_live(rs) == acked
+    assert rs.stats()["fault_counts"]["kill"] == 1
+    rs.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Primary kill + failover: the zero-lost-acked-writes acceptance test
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_primary_kill_failover_loses_no_acked_write():
+    rs, rng, acked = _mk(ship_batch=4)
+    _churn(rs, rng, acked, inserts=4, deletes=2)
+    # ship only part of the backlog (one batch per replica), then kill the
+    # primary mid-window: replicas are behind by construction
+    rs.pump(max_batches=1)
+    lag = rs.lag(COLL)[COLL]
+    assert max(lag.values()) > 0, "test needs replicas mid-window"
+    rs.kill_primary()
+    with pytest.raises(PrimaryDead):
+        rs.insert(COLL, _rows(rng, 2))
+    out = rs.failover()
+    # the failover replayed the shipping-log tail: every acked write is
+    # present on the promoted primary, bit-for-bit the set the callers
+    # were promised
+    assert out["replayed"] > 0
+    assert out["failover_ms"] >= 0
+    assert _primary_live(rs) == acked, "acked write lost across failover"
+    # the promoted service accepts writes and keeps shipping to the
+    # surviving replica (sequence numbers continue on the shared log)
+    new_ids = np.arange(10_000, 10_008)
+    rs.insert(COLL, _rows(rng, 8), ids=new_ids)
+    acked.update(int(i) for i in new_ids)
+    rs.pump()
+    assert _primary_live(rs) == acked
+    (survivor,) = rs.replicas
+    assert _replica_live(survivor) == acked
+    _assert_parity(rs, survivor, rng)
+    rs.shutdown()
+
+
+@pytest.mark.tier1
+def test_preemption_drain_makes_failover_replay_free():
+    """SIGTERM-style preemption (PreemptionGuard.request) drains the log
+    before the switch: a planned failover replays zero entries."""
+    rs, rng, acked = _mk()
+    _churn(rs, rng, acked)
+    out = rs.planned_failover()
+    assert out["replayed"] == 0
+    assert _primary_live(rs) == acked
+    assert not rs.guard.should_checkpoint      # consumed by the failover
+    rs.shutdown()
+
+
+@pytest.mark.tier1
+def test_overloaded_primary_sheds_query_to_replica():
+    # depth-only admission: est-wait rejection would make the filler
+    # submissions below racy (they'd be rejected whenever the build's mean
+    # exec time exceeds the wait bound)
+    adm = AdmissionControl(max_queue_depth=2, max_queue_wait_s=None)
+    rs, rng, acked = _mk(admission=adm)
+    _churn(rs, rng, acked, inserts=1, deletes=0)
+    rs.pump()
+    # wedge every worker, then fill BOTH query-capable queues (latency and
+    # throughput — templates.route sends small batches to latency but this
+    # profile's full-scan crossover is 1, so queries go to throughput) to
+    # the admission limit: the next primary query gets a typed Overloaded
+    # whichever class it routes to, and the ReplicaSet sheds it to a fresh
+    # replica.  Wedge background and throughput FIRST (they steal each
+    # other's lanes) so the latency wedge can only land on the latency
+    # worker.
+    import threading
+    gate = threading.Event()
+    sched = rs.primary.scheduler
+
+    def wedge(started):
+        started.set()
+        gate.wait()
+
+    for backend in ("background", "throughput", "latency"):
+        started = threading.Event()
+        sched.submit(Task(fn=lambda ev=started: wedge(ev), kind="query",
+                          backend=backend))
+        assert started.wait(timeout=10), f"{backend} wedge never ran"
+    for backend in ("latency", "throughput"):
+        for _ in range(adm.max_queue_depth):
+            sched.submit(Task(fn=lambda: None, kind="query", backend=backend))
+    try:
+        qs = _rows(rng, 2)
+        with pytest.raises(Overloaded):
+            rs.primary.query(COLL, qs)
+        ids, _ = rs.query(COLL, qs)            # sheds instead of failing
+        assert ids.shape == (2, 10)
+        assert rs.stats()["shed_to_replica"] == 1
+        r_ids, _ = rs.replicas[0].service.query(COLL, qs)
+        np.testing.assert_array_equal(ids, r_ids)
+    finally:
+        gate.set()
+    rs.shutdown()
+
+
+@pytest.mark.tier1
+def test_shipping_log_trim_and_gap_detection():
+    log = ShippingLog("c")
+    for i in range(10):
+        log.append("insert", None, np.asarray([i]))
+    assert log.last_seq() == 10
+    assert [e.seq for e in log.tail(4, limit=3)] == [5, 6, 7]
+    assert log.trim(6) == 6
+    assert log.retained() == 4
+    assert [e.seq for e in log.tail(6)] == [7, 8, 9, 10]
+    with pytest.raises(RuntimeError, match="trim horizon"):
+        log.tail(3)                    # fell behind the trim horizon
+
+
+# ---------------------------------------------------------------------------
+# Randomized fault plans (property marker: separate seeded CI job)
+# ---------------------------------------------------------------------------
+
+class RandomFaults:
+    """Seeded random verdicts: each shipped batch may drop/delay/duplicate;
+    never kills (kill interleavings are the deterministic plans' job —
+    random kills would need replica resurrection to keep pumping)."""
+
+    def __init__(self, seed, p_fault=0.3):
+        self.rng = np.random.default_rng(seed)
+        self.p_fault = p_fault
+
+    def on_ship(self, replica, collection, entries):
+        if self.rng.random() < self.p_fault:
+            return str(self.rng.choice(["drop", "delay", "duplicate"]))
+        return "ok"
+
+
+@pytest.mark.property
+@pytest.mark.parametrize("seed", range(5))
+def test_property_random_faults_never_lose_acked_writes(seed):
+    rng = np.random.default_rng(1000 + seed)
+    rs, data_rng, acked = _mk(injector=RandomFaults(seed), seed=seed)
+    next_id = 256
+    for _ in range(rng.integers(3, 8)):
+        op = rng.choice(["insert", "delete", "pump"])
+        if op == "insert":
+            n = int(rng.integers(2, 12))
+            ids = np.arange(next_id, next_id + n)
+            rs.insert(COLL, _rows(data_rng, n), ids=ids)
+            acked.update(int(i) for i in ids)
+            next_id += n
+        elif op == "delete" and acked:
+            victims = rng.choice(sorted(acked),
+                                 size=min(3, len(acked)), replace=False)
+            rs.delete(COLL, victims)
+            acked.difference_update(int(v) for v in victims)
+        else:
+            rs.pump(max_batches=int(rng.integers(1, 3)))
+        # watermarks only advance, and never past the shipped seq
+        last = rs._logs[COLL].last_seq()
+        assert all(0 <= r.watermark(COLL) <= last for r in rs.replicas)
+    # kill the primary at this random point; failover must preserve every
+    # acked write, and the survivors converge to bitwise parity
+    rs.kill_primary()
+    rs.failover()
+    assert _primary_live(rs) == acked
+    rs._injector = None
+    for _ in range(64):
+        if all(r.watermark(COLL) == rs._logs[COLL].last_seq()
+               for r in rs.replicas if r.alive):
+            break
+        rs.pump()
+    for rep in rs.replicas:
+        if rep.alive:
+            assert _replica_live(rep) == acked
+            _assert_parity(rs, rep, data_rng)
+    rs.shutdown()

@@ -31,8 +31,10 @@ from __future__ import annotations
 # ---------------------------------------------------------------------------
 LOCK_LEVELS = {
     "_rebuild_locks": 40,   # per-shard rebuild serialization (outermost)
+    "_repl_lock": 35,       # ReplicaSet pump/failover (applies into replicas)
     "_admit_lock": 30,      # ResidencyManager admission/eviction
     "_writer_lock": 20,     # per-collection writer serialization
+    "_ship_lock": 15,       # shipping-log append (inside writer sections)
     "_lock": 10,            # leaf: pointer-swap/counter/registry sections
 }
 
@@ -55,6 +57,9 @@ ENTRY_LOCKS = {
     "Collection._rebalance_spill_host": ("_writer_lock",),
     "Collection._log_delta": ("_writer_lock",),
     "Collection._build_admitted": (),
+    # shipping hook runs inside the primary's writer critical section and
+    # only ever descends to the shipping-log leaf (_ship_lock, 15)
+    "Collection._ship": ("_writer_lock",),
 }
 
 # Known lock ceilings for names the corpus-wide fixpoint cannot see or
@@ -74,6 +79,13 @@ CEILING_SEEDS = {
     "insert": "_admit_lock",
     "delete": "_admit_lock",
     "query": "_admit_lock",
+    # replication tier: pump/failover hold _repl_lock (35) while applying
+    # shipped deltas into replica collections (admission/writer below);
+    # apply_delta_batch itself tops out at the admission lock
+    "pump": "_repl_lock",
+    "failover": "_repl_lock",
+    "apply_delta_batch": "_admit_lock",
+    "attach_shipper": "_admit_lock",
 }
 
 # ---------------------------------------------------------------------------
